@@ -1,0 +1,134 @@
+"""Fig. 7 reproduction: design-space exploration of VEC_SIZE x CU_NUM.
+
+The paper sweeps the two throughput parameters on DE5-net: performance
+scales linearly with VEC x CU until (a) the 256-DSP budget (VEC=16,CU=16
+"too large to fit") and (b) the 12.8 GB/s DDR3 roofline bite; optimum
+(VEC=8, CU=16) at 33.9 GOPS / 43 ms.
+
+  * --fpga sweep: DE5-net constants. Peak model = 2*VEC*CU*f_clk scaled by
+    the pipeline efficiency the paper itself measured (33.9 GOPS at
+    VEC*CU=128 @ 181 MHz => eta = 0.73, from Channel stalls + II effects).
+    We reproduce the knee AND the published optimum.
+  * v5e sweep: the same methodology on the target hardware — c_blk/m_blk
+    (the conv_pipe block knobs) against MXU tile efficiency, the 16 MiB
+    VMEM budget (the TPU's "DSP count"), and the HBM roofline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.config import flops_per_image
+from repro.core.pipeline import fusion_savings
+from repro.core.roofline import HBM_BW, PEAK_FLOPS
+
+# DE5-net / Stratix-V constants (paper)
+FPGA_CLK = 181e6            # Hz (paper's achieved fmax)
+FPGA_BW = 12.8e9            # DDR3 bytes/s (paper)
+FPGA_DSP = 256              # Stratix-V A7 budget
+VMEM_BYTES = 16 * 2 ** 20   # v5e per-core VMEM
+MXU = 128                   # systolic array dim
+
+# AlexNet per-conv-layer (ops share, input channels): VEC lanes are wasted
+# when C_l % VEC != 0 (conv1's C=3 pays ceil(3/VEC)*VEC/3) — the reason the
+# paper's optimum prefers VEC=8 over VEC=16 at equal VEC*CU.
+_ALEX_LAYERS = [(0.145, 3), (0.305, 96), (0.102, 256), (0.153, 384),
+                (0.102, 384), (0.051, 9216), (0.115, 4096), (0.027, 4096)]
+
+
+def _vec_waste(vec: int) -> float:
+    """Time multiplier from channel-padding waste at a given VEC_SIZE."""
+    return sum(share * (-(-c // vec) * vec) / c for share, c in _ALEX_LAYERS)
+
+
+# pipeline efficiency calibrated on the paper's own measurement:
+# 33.9 GOPS at VEC=8, CU=16, 181 MHz including VEC=8 channel waste
+FPGA_ETA = 33.9e9 * _vec_waste(8) / (2 * 8 * 16 * FPGA_CLK)
+
+
+def sweep_fpga():
+    cfg = get_config("alexnet")
+    ops = flops_per_image(cfg)
+    _, fused_bytes, _ = fusion_savings(cfg, batch=1)
+    rows = []
+    for vec in (4, 8, 16):
+        for cu in (2, 4, 8, 16):        # the paper's explored CU range
+            t_comp = ops * _vec_waste(vec) / (2 * vec * cu * FPGA_CLK
+                                              * FPGA_ETA)
+            t_mem = fused_bytes / FPGA_BW
+            # DSP usage ~ VEC*CU MACs + fixed overhead (paper: 162 at 128)
+            dsp = vec * cu + 34
+            rows.append(dict(vec=vec, cu=cu, t=max(t_comp, t_mem),
+                             gops=ops / max(t_comp, t_mem) / 1e9,
+                             bound="mem" if t_mem > t_comp else "comp",
+                             feasible=dsp <= FPGA_DSP))
+    return rows
+
+
+def sweep_v5e():
+    """c_blk x m_blk for conv_pipe on a VGG conv3 layer (112x112x128)."""
+    H = W = 112
+    C = Cout = 128
+    K = 3
+    ops = 2 * H * W * Cout * K * K * C
+    act_bytes = (H * W * C + H * W * Cout) * 2          # bf16
+    w_bytes = K * K * C * Cout * 2
+    rows = []
+    for vec in (8, 32, 128, 256):           # c_blk
+        for cu in (8, 32, 128, 256):        # m_blk
+            util = min(1.0, vec / MXU) * min(1.0, cu / MXU)
+            t_comp = ops / (PEAK_FLOPS * util)
+            # x block is re-fetched for every output-feature tile (the
+            # BlockSpec revisits it): small m_blk multiplies input traffic
+            n_m = max(1, Cout // cu)
+            x_bytes = H * W * C * 2
+            t_mem = (x_bytes * n_m + w_bytes
+                     + H * W * Cout * 2) / HBM_BW
+            # VMEM working set: x block (H,W,c_blk) + w + scratch(H,W,m_blk)
+            vmem = (H * W * vec * 2 + K * K * vec * cu * 2
+                    + H * W * cu * 4)
+            rows.append(dict(vec=vec, cu=cu, t=max(t_comp, t_mem),
+                             gops=ops / max(t_comp, t_mem) / 1e9,
+                             bound="mem" if t_mem > t_comp else "comp",
+                             feasible=vmem <= VMEM_BYTES))
+    return rows
+
+
+def _print(rows, vecs, cus, title, paper_note):
+    print(f"\n=== {title} ===")
+    print(" " * 8 + "".join(f"cu={c:<8d}" for c in cus))
+    for vec in vecs:
+        line = f"vec={vec:<4d}"
+        for cu in cus:
+            r = next(x for x in rows if x["vec"] == vec and x["cu"] == cu)
+            mark = "*" if not r["feasible"] else ""
+            line += f"{r['gops']:7.1f}{r['bound'][0]}{mark} "
+        print(line)
+    feas = [r for r in rows if r["feasible"]]
+    best = max(feas, key=lambda r: r["gops"])
+    print(f"optimum: VEC={best['vec']} CU={best['cu']} -> "
+          f"{best['gops']:.1f} GOPS ({best['t']*1e3:.1f} ms)  {paper_note}")
+    print("(* = infeasible: over the DSP/VMEM budget; "
+          "m/c = memory/compute bound)")
+    return best
+
+
+def main(csv=False):
+    best_f = _print(sweep_fpga(), (4, 8, 16), (2, 4, 8, 16),
+                    "Fig.7 DSE (DE5-net constants) AlexNet GOPS",
+                    "[paper: VEC=8 CU=16 -> 33.9 GOPS @ 43 ms]")
+    best_v = _print(sweep_v5e(), (8, 32, 128, 256), (8, 32, 128, 256),
+                    "Fig.7 methodology on v5e: conv_pipe c_blk x m_blk "
+                    "(VGG conv3)",
+                    "[VMEM budget replaces the DSP budget]")
+    assert best_f["vec"] == 8 and best_f["cu"] == 16, \
+        "FPGA DSE must reproduce the paper's optimum"
+    if csv:
+        print(f"fig7_dse_fpga,{best_f['t']*1e6:.0f},"
+              f"best=V{best_f['vec']}xC{best_f['cu']}")
+        print(f"fig7_dse_v5e,{best_v['t']*1e6:.0f},"
+              f"best=V{best_v['vec']}xC{best_v['cu']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Fig. 8 reproduction: per-stage execution timeline of the pipeline.
+
+The paper profiles each OpenCL kernel (MemRD / Conv / Pool / LRN / MemWR)
+over an AlexNet/VGG run. Our stages are the fused groups from
+models.cnn.fuse_plan; we time each group's jitted computation and report
+the share of total runtime — the same breakdown the paper's timeline shows
+(conv dominating, LRN a thin slice, pooling nearly free inside the fused
+groups).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.kernels import ops as kops
+from repro.kernels.ref import pool_ref
+from repro.models.cnn import fuse_plan, init_cnn_params
+from benchmarks.bandwidth import _apply_conv
+
+
+def stage_times(name: str, batch: int = 1, repeats: int = 2):
+    cfg = get_config(name)
+    key = jax.random.key(0)
+    params = init_cnn_params(key, cfg)
+    x = jax.random.normal(key, (batch, cfg.input_hw, cfg.input_hw,
+                                cfg.input_ch), jnp.float32)
+    rows = []
+    for group in fuse_plan(cfg):
+        l = cfg.layers[group[0]]
+        p = params[group[0]]
+        label = "+".join(cfg.layers[i].kind for i in group)
+
+        if l.kind == "conv":
+            pool = cfg.layers[group[1]] if len(group) == 2 else None
+            fn = jax.jit(lambda v: _apply_conv(l, p, v, pool))
+            args = (x,)
+        elif l.kind == "pool":
+            fn = jax.jit(lambda v: pool_ref(v, l.pool, l.kernel, l.stride))
+            args = (x,)
+        elif l.kind == "lrn":
+            fn = jax.jit(lambda v: kops.lrn(v))
+            args = (x,)
+        else:  # fc
+            xf = x.reshape(batch, -1)
+            fn = jax.jit(lambda v, w, b: kops.fc(v, w, b, relu=l.relu))
+            args = (xf, p["w"], p["b"])
+
+        out = fn(*args)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            jax.block_until_ready(fn(*args))
+        dt = (time.perf_counter() - t0) / repeats
+        rows.append({"stage": label, "ms": dt * 1e3})
+        x = out if l.kind != "fc" else out          # feed forward
+    total = sum(r["ms"] for r in rows)
+    for r in rows:
+        r["share"] = r["ms"] / total
+    return rows, total
+
+
+def main(csv=False):
+    for name in ("alexnet", "vgg16"):
+        rows, total = stage_times(name)
+        print(f"\n=== Fig.8 stage timeline ({name}, batch=1, CPU) ===")
+        for r in rows:
+            bar = "#" * int(r["share"] * 40)
+            print(f"{r['stage']:12s} {r['ms']:9.2f} ms {r['share']:6.1%} {bar}")
+        print(f"{'total':12s} {total:9.2f} ms")
+        if csv:
+            print(f"fig8_timeline_{name},{total*1e3:.0f},n_stages={len(rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Roofline table for the assigned LM architectures (reads the dry-run
+artifacts produced by launch/dryrun.py; see EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load(tag: str):
+    rows = []
+    for f in sorted(OUT_DIR.glob(f"{tag}__*.json")):
+        d = json.loads(f.read_text())
+        rows.append(d)
+    return rows
+
+
+def fmt_table(rows, title):
+    print(f"\n=== {title} ===")
+    print(f"{'arch':17s} {'shape':12s} {'mesh':11s} "
+          f"{'T_comp(ms)':>10s} {'T_mem(ms)':>10s} {'T_coll(ms)':>10s} "
+          f"{'bound':>6s} {'useful':>7s} {'roofline':>8s}")
+    for d in rows:
+        print(f"{d['arch']:17s} {d['shape']:12s} {d['mesh']:11s} "
+              f"{d['t_compute']*1e3:10.2f} {d['t_memory']*1e3:10.2f} "
+              f"{d['t_collective']*1e3:10.2f} "
+              f"{d['bottleneck'][:6]:>6s} {d['useful_flops_ratio']:7.1%} "
+              f"{d['roofline_fraction']:8.2%}")
+
+
+def main(csv=False):
+    base = load("roofline")
+    if base:
+        fmt_table(base, "LM roofline baselines (unrolled dry-run, 16x16)")
+    scan = [d for d in load("baseline") if d["mesh"] == "pod2x16x16"]
+    if scan:
+        fmt_table(scan, "multi-pod (2x16x16) compile-proof cells "
+                        "(scan-mode costs: loop bodies counted once)")
+    if csv:
+        for d in base:
+            print(f"roofline_{d['arch']}_{d['shape']},0,"
+                  f"frac={d['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

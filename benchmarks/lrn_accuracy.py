@@ -1,0 +1,43 @@
+"""LRN PWL accuracy vs segmentation parameter n (paper: 0.5% max at n=2).
+
+Sweeps n_sub_bits over AlexNet-scale activations and reports the max
+relative error of the exponent-segmented PWL against exact LRN — the
+reproduction of the paper's LRN accuracy claim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.lrn_pwl import lrn_pwl
+
+
+def main(csv=False):
+    key = jax.random.key(3)
+    # conv1-like activations (96 feature maps), several magnitudes
+    errs = {}
+    for n in (0, 1, 2, 3, 4):
+        worst = 0.0
+        for scale in (0.5, 2.0, 8.0, 32.0):
+            x = jax.random.normal(key, (1, 14, 14, 96)) * scale
+            exact = ref.lrn_ref(x)
+            approx = lrn_pwl(x, n_sub_bits=n)
+            rel = np.max(np.abs(np.asarray(approx - exact))
+                         / (np.abs(np.asarray(exact)) + 1e-9))
+            worst = max(worst, float(rel))
+        errs[n] = worst
+    print("\n=== LRN piecewise-linear approximation error vs n ===")
+    print("(paper: max error 0.5% at n=2)")
+    for n, e in errs.items():
+        flag = " <= 0.5% OK" if e <= 0.005 else ""
+        print(f"n={n}: max rel err {e:.4%}{flag}")
+    assert errs[2] <= 0.005, "n=2 must meet the paper's bound"
+    if csv:
+        print(f"lrn_accuracy,0,n2_err_pct={errs[2]*100:.3f}")
+    return errs
+
+
+if __name__ == "__main__":
+    main()

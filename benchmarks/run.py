@@ -1,0 +1,46 @@
+"""Benchmark harness: one entry per paper table/figure + the LM roofline.
+
+Prints ``name,us_per_call,derived`` CSV lines at the end (harness contract).
+Run: PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import sys
+import time
+from contextlib import redirect_stdout
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slow full-scale VGG timing")
+    args, _ = ap.parse_known_args()
+
+    sys.path.insert(0, "src")
+    from benchmarks import (bandwidth, fig7_dse, fig8_timeline,
+                            lm_roofline, lrn_accuracy, table1_comparison)
+
+    csv_rows = []
+
+    def run(name, fn):
+        t0 = time.perf_counter()
+        fn()
+        csv_rows.append((name, (time.perf_counter() - t0) * 1e6))
+
+    run("lrn_accuracy(paper_0.5pct_claim)", lrn_accuracy.main)
+    run("fig7_dse(vec_x_cu_sweep)", fig7_dse.main)
+    run("bandwidth(fusion_claim)", bandwidth.main)
+    if not args.fast:
+        run("table1(alexnet_vgg_throughput)", table1_comparison.main)
+        run("fig8_timeline(stage_profile)", fig8_timeline.main)
+    run("lm_roofline(assigned_archs)", lm_roofline.main)
+
+    print("\nname,us_per_call,derived")
+    for name, us in csv_rows:
+        print(f"{name},{us:.0f},ok")
+
+
+if __name__ == "__main__":
+    main()

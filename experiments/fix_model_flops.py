@@ -1,0 +1,22 @@
+import json, glob, sys
+sys.path.insert(0, "src")
+import os
+os.environ.setdefault("XLA_FLAGS", "")
+from repro.configs import get_config
+from repro.core.config import get_shape
+from repro.core.roofline import PEAK_FLOPS
+from repro.launch.dryrun import model_flops_for
+
+for f in glob.glob("experiments/dryrun/roofline__*.json") + \
+         glob.glob("experiments/dryrun/exact__*.json") + \
+         glob.glob("experiments/hillclimb/*.json"):
+    d = json.load(open(f))
+    cfg = get_config(d["arch"])
+    mf = model_flops_for(cfg, get_shape(d["shape"]))
+    d["model_flops"] = mf
+    hlo_global = d["flops_per_device"] * d["chips"]
+    d["useful_flops_ratio"] = mf / hlo_global if hlo_global else 0.0
+    t_bound = max(d["t_compute"], d["t_memory"], d["t_collective"])
+    d["roofline_fraction"] = (mf / (d["chips"] * PEAK_FLOPS)) / t_bound
+    json.dump(d, open(f, "w"), indent=1)
+print("rewrote model_flops for all artifacts")

@@ -1,0 +1,66 @@
+"""Render §Roofline and §Perf tables into EXPERIMENTS.md from artifacts."""
+import json
+import glob
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def load(pattern):
+    rows = []
+    for f in sorted(glob.glob(str(ROOT / "experiments" / pattern))):
+        rows.append((Path(f).stem, json.loads(Path(f).read_text())))
+    return rows
+
+
+def roofline_table():
+    rows = load("dryrun/roofline__*.json")
+    out = ["| arch | shape | T_comp (ms) | T_mem (ms) | T_coll (ms) | "
+           "bound | useful FLOPs | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    worst = None
+    coll_bound = []
+    for _, d in rows:
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['t_compute']*1e3:.1f} | "
+            f"{d['t_memory']*1e3:.1f} | {d['t_collective']*1e3:.1f} | "
+            f"{d['bottleneck']} | {d['useful_flops_ratio']:.1%} | "
+            f"{d['roofline_fraction']:.2%} |")
+        if worst is None or d["roofline_fraction"] < worst[1]:
+            worst = (f"{d['arch']} x {d['shape']}", d["roofline_fraction"])
+        if d["bottleneck"] == "collective":
+            coll_bound.append(f"{d['arch']} x {d['shape']}")
+    out.append("")
+    out.append(f"Worst roofline fraction: **{worst[0]}** ({worst[1]:.2%}). "
+               f"Collective-bound cells: {', '.join(coll_bound) or 'none'}.")
+    return "\n".join(out)
+
+
+def perf_table():
+    rows = load("hillclimb/*.json")
+    if not rows:
+        return "(hillclimb artifacts pending)"
+    out = ["| cell / iteration | T_comp (ms) | T_mem (ms) | T_coll (ms) | "
+           "bound | useful | roofline frac |",
+           "|---|---|---|---|---|---|---|"]
+    for name, d in rows:
+        out.append(
+            f"| {name} | {d['t_compute']*1e3:.1f} | {d['t_memory']*1e3:.1f} |"
+            f" {d['t_collective']*1e3:.1f} | {d['bottleneck']} | "
+            f"{d['useful_flops_ratio']:.1%} | {d['roofline_fraction']:.2%} |")
+    return "\n".join(out)
+
+
+def main():
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    md = md.replace("<!-- ROOFLINE_TABLE -->",
+                    roofline_table() + "\n\n<!-- ROOFLINE_TABLE -->")
+    md = md.replace("<!-- PERF_LOG -->",
+                    perf_table() + "\n\n<!-- PERF_LOG -->")
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("tables rendered into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

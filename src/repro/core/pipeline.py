@@ -1,0 +1,118 @@
+"""The PipeCNN execution model as a reusable framework abstraction.
+
+PipeCNN's claim: cascading MemRD -> Conv -> Pool -> MemWR through on-chip
+channels removes the inter-stage global-memory round trip, cutting the
+bandwidth requirement vs. separate kernels. This module makes that claim
+*quantitative and testable* on TPU: ``bandwidth_model`` computes the HBM
+traffic of a layer sequence in fused vs. unfused execution, and
+``measure_traffic`` checks it against XLA's compiled cost analysis.
+
+Used by benchmarks/bandwidth.py to validate the paper's core claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import CNNConfig, ConvLayer
+
+
+@dataclasses.dataclass
+class StageTraffic:
+    name: str
+    read_bytes: int
+    write_bytes: int
+
+    @property
+    def total(self) -> int:
+        return self.read_bytes + self.write_bytes
+
+
+def _layer_shapes(cfg: CNNConfig):
+    """Yield (layer, in_shape, out_shape) with NHWC shapes per image."""
+    h = w = cfg.input_hw
+    c = cfg.input_ch
+    for l in cfg.layers:
+        in_shape = (h, w, c)
+        if l.kind == "conv":
+            h = (h + 2 * l.pad - l.kernel) // l.stride + 1
+            w = (w + 2 * l.pad - l.kernel) // l.stride + 1
+            c = l.out_ch
+        elif l.kind == "pool":
+            h = (h - l.kernel) // l.stride + 1
+            w = (w - l.kernel) // l.stride + 1
+        elif l.kind == "fc":
+            h, w, c = 1, 1, l.out_ch
+        yield l, in_shape, (h, w, c)
+
+
+def bandwidth_model(cfg: CNNConfig, batch: int = 1, fused: bool = True,
+                    dtype_bytes: int = 4) -> List[StageTraffic]:
+    """Analytic HBM traffic per pipeline stage (weights + activations).
+
+    Unfused (the FPGA'16 [4] organization): every stage reads its input
+    from and writes its output to global memory. Fused (PipeCNN): a
+    conv+pool group touches memory once — pool intermediate stays on chip.
+    """
+    from repro.models.cnn import fuse_plan
+    import numpy as np
+
+    plan = (fuse_plan(cfg) if fused
+            else [(i,) for i in range(len(cfg.layers))])
+    shapes = list(_layer_shapes(cfg))
+    out: List[StageTraffic] = []
+    px = lambda s: int(np.prod(s)) * dtype_bytes * batch
+    for group in plan:
+        l, in_shape, _ = shapes[group[0]]
+        _, _, out_shape = shapes[group[-1]]
+        w_bytes = 0
+        if l.kind == "conv":
+            w_bytes = (l.kernel * l.kernel * (in_shape[2] // l.groups)
+                       * l.out_ch) * dtype_bytes
+        elif l.kind == "fc":
+            w_bytes = int(np.prod(in_shape)) * l.out_ch * dtype_bytes
+        name = "+".join(cfg.layers[i].kind for i in group)
+        out.append(StageTraffic(name, px(in_shape) + w_bytes, px(out_shape)))
+    return out
+
+
+def im2col_gemm_traffic(cfg: CNNConfig, batch: int = 1,
+                        dtype_bytes: int = 4) -> int:
+    """HBM traffic of the FPGA'16 [4] organization PipeCNN compares against:
+    conv as explicit im2col + GEMM — the patch matrix (OHxOW, K*K*C) is
+    materialized in global memory (written once, read once), multiplying
+    activation traffic by ~K^2."""
+    import numpy as np
+    total = 0
+    for l, in_shape, out_shape in _layer_shapes(cfg):
+        px_in = int(np.prod(in_shape)) * dtype_bytes * batch
+        px_out = int(np.prod(out_shape)) * dtype_bytes * batch
+        if l.kind == "conv":
+            oh, ow, m = out_shape
+            cg = in_shape[2] // l.groups
+            patches = oh * ow * l.kernel * l.kernel * cg \
+                * dtype_bytes * batch
+            w_bytes = l.kernel * l.kernel * cg * m * dtype_bytes
+            total += px_in + 2 * patches + w_bytes + px_out
+        elif l.kind == "fc":
+            w_bytes = int(np.prod(in_shape)) * out_shape[2] * dtype_bytes
+            total += px_in + w_bytes + px_out
+        else:
+            total += px_in + px_out
+    return total
+
+
+def fusion_savings(cfg: CNNConfig, batch: int = 1) -> Tuple[int, int, float]:
+    """(unfused_bytes, fused_bytes, reduction_fraction)."""
+    unf = sum(s.total for s in bandwidth_model(cfg, batch, fused=False))
+    fus = sum(s.total for s in bandwidth_model(cfg, batch, fused=True))
+    return unf, fus, 1.0 - fus / unf
+
+
+def measure_traffic(fn, *args) -> float:
+    """Compiled bytes-accessed for fn(*args) (XLA cost analysis)."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    return float(compiled.cost_analysis().get("bytes accessed", 0.0))

@@ -1,0 +1,161 @@
+"""conv_pipe — the PipeCNN pipeline as ONE fused Pallas TPU kernel.
+
+PipeCNN cascades MemRD -> Conv -> Pool -> MemWR through OpenCL channels so
+inter-stage data never touches DDR. On TPU the same dataflow is one
+`pallas_call`:
+
+  * The BlockSpec index maps ARE the data movers (MemRD/MemWR): they drive
+    the HBM->VMEM DMA engine with the Fig. 4 work-item mapping.
+  * The conv is computed as an on-the-fly im2col matmul on the MXU
+    (kh/kw-unrolled strided slices — the multi-mode engine's conv mode).
+  * bias + ReLU + line-buffer pooling run in the epilogue while the tile is
+    still in VMEM (the Conv->Pool channel).
+
+Grid: (batch, M_tiles, C_tiles) with the input-channel axis LAST and
+"arbitrary" semantics — the fp32 VMEM scratch accumulates partial sums
+across C-tiles (the paper's delayed-buffer accumulator; the MXU needs no
+II=2 shift register).
+
+Block-size knobs map to the paper's throughput parameters:
+  C_BLK  <-> VEC_SIZE  (input-feature vectorization)
+  M_BLK  <-> CU_NUM    (parallel output-feature CUs)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces; interpret mode runs fine without a TPU backend
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _conv_pipe_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
+                      stride: int, oh: int, ow: int, relu: bool,
+                      pool: Optional[str], pool_k: int, pool_s: int,
+                      n_c_tiles: int):
+    """One (batch, M-tile) output block; accumulates over C-tiles."""
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                   # (HP, WP, C_BLK)
+    w = w_ref[...]                                 # (KH, KW, C_BLK, M_BLK)
+    kh, kw = w.shape[0], w.shape[1]
+    c_blk, m_blk = w.shape[2], w.shape[3]
+
+    # on-the-fly im2col: kh*kw strided slices, each a (OH*OW, C) x (C, M)
+    # matmul on the MXU, accumulated in fp32 VMEM scratch.
+    acc = acc_ref[...]
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                x, (i, j, 0),
+                (i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, c_blk),
+                (stride, stride, 1))               # (OH, OW, C_BLK)
+            acc += jax.lax.dot_general(
+                patch.reshape(oh * ow, c_blk), w[i, j],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32).reshape(oh, ow, m_blk)
+    acc_ref[...] = acc
+
+    @pl.when(c_idx == n_c_tiles - 1)
+    def _epilogue():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        if pool is not None:
+            # line-buffer pooling: the conv tile is still in VMEM; reduce
+            # pool_k x pool_k strided windows (the (L+1)-input pool logic).
+            php = (oh - pool_k) // pool_s + 1
+            pwp = (ow - pool_k) // pool_s + 1
+            win = None
+            for i in range(pool_k):
+                for j in range(pool_k):
+                    sl = jax.lax.slice(
+                        y, (i, j, 0),
+                        (i + (php - 1) * pool_s + 1,
+                         j + (pwp - 1) * pool_s + 1, m_blk),
+                        (pool_s, pool_s, 1))
+                    if win is None:
+                        win = sl
+                    elif pool == "max":
+                        win = jnp.maximum(win, sl)
+                    else:
+                        win = win + sl
+            y = win / (pool_k * pool_k) if pool == "avg" else win
+        o_ref[0] = y.astype(o_ref.dtype)
+
+
+def conv_pipe(x: jax.Array, w: jax.Array, b: jax.Array, *,
+              stride: int = 1, pad: int = 0, relu: bool = True,
+              pool: Optional[str] = None, pool_k: int = 2, pool_s: int = 2,
+              c_blk: int = 8, m_blk: int = 32,
+              interpret: bool = True) -> jax.Array:
+    """Fused conv(+bias)(+ReLU)(+pool). x (B,H,W,C); w (KH,KW,C,M); b (M,).
+
+    c_blk/m_blk are the VEC_SIZE/CU_NUM analogues. interpret=True runs the
+    kernel body on CPU (this container); on TPU pass interpret=False.
+    """
+    B, H, W, C = x.shape
+    KH, KW, _, M = w.shape
+    m_orig = M
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+        H, W = H + 2 * pad, W + 2 * pad
+    OH = (H - KH) // stride + 1
+    OW = (W - KW) // stride + 1
+    if pool is not None:
+        ph = (OH - pool_k) // pool_s + 1
+        pw = (OW - pool_k) // pool_s + 1
+    else:
+        ph, pw = OH, OW
+
+    c_blk = min(c_blk, C)
+    m_blk = min(m_blk, M)
+    if C % c_blk:
+        padc = c_blk - C % c_blk
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, padc)))
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, padc), (0, 0)))
+        C += padc
+    if M % m_blk:
+        padm = m_blk - M % m_blk
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, padm)))
+        b = jnp.pad(b, (0, padm))
+        M += padm
+    n_c, n_m = C // c_blk, M // m_blk
+
+    # rows of x needed for one full-output-height block
+    hp = (OH - 1) * stride + KH
+
+    kernel = functools.partial(
+        _conv_pipe_kernel, stride=stride, oh=OH, ow=OW, relu=relu,
+        pool=pool, pool_k=pool_k, pool_s=pool_s, n_c_tiles=n_c)
+
+    scratch = [pltpu.VMEM((OH, OW, m_blk), jnp.float32)]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, n_m, n_c),
+        in_specs=[
+            pl.BlockSpec((1, hp, W, c_blk), lambda bi, mi, ci: (bi, 0, 0, ci)),
+            pl.BlockSpec((KH, KW, c_blk, m_blk),
+                         lambda bi, mi, ci: (0, 0, ci, mi)),
+            pl.BlockSpec((m_blk,), lambda bi, mi, ci: (mi,)),
+        ],
+        out_specs=pl.BlockSpec((1, ph, pw, m_blk),
+                               lambda bi, mi, ci: (bi, 0, 0, mi)),
+        out_shape=jax.ShapeDtypeStruct((B, ph, pw, M), x.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(x, w, b)
+    return out[..., :m_orig]

@@ -1,0 +1,87 @@
+"""matmul_pipe — PipeCNN's multi-mode compute engine in FC/GEMM mode.
+
+The paper's single convolution kernel serves conv (CN = K*K*C') and FC
+(CN = C') by flattening to one MAC loop. On TPU the unified engine is a
+blocked GEMM: conv mode is `conv_pipe`'s im2col matmul; this kernel is the
+FC mode, with PipeCNN's batched-FC weight reuse (batch rows share the
+weight tile resident in VMEM).
+
+  BK <-> VEC_SIZE  (input vectorization per cycle)
+  BN <-> CU_NUM    (parallel output features)
+
+fp32 VMEM scratch accumulates across K-tiles (grid k-axis last, arbitrary
+semantics); bias + ReLU fuse into the epilogue.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int,
+                   relu: bool):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _epilogue():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def matmul_pipe(x: jax.Array, w: jax.Array, b: jax.Array = None, *,
+                relu: bool = False, bm: int = 128, bn: int = 128,
+                bk: int = 128, interpret: bool = True) -> jax.Array:
+    """y = relu(x @ w + b). x (M, K); w (K, N); b (N,)."""
+    M, K = x.shape
+    _, N = w.shape
+    if b is None:
+        b = jnp.zeros((N,), x.dtype)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+
+    def padto(a, axis, blk):
+        rem = a.shape[axis] % blk
+        if not rem:
+            return a
+        padw = [(0, 0)] * a.ndim
+        padw[axis] = (0, blk - rem)
+        return jnp.pad(a, padw)
+
+    xp, wp, bp = padto(padto(x, 0, bm), 1, bk), padto(padto(w, 0, bk), 1, bn), \
+        padto(b, 0, bn)
+    Mp, Kp = xp.shape
+    Np = wp.shape[1]
+    grid = (Mp // bm, Np // bn, Kp // bk)
+
+    kern = functools.partial(_matmul_kernel, n_k=grid[2], relu=relu)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((bn,), lambda mi, ni, ki: (ni,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:M, :N]

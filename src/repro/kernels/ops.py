@@ -1,0 +1,71 @@
+"""jit'd public wrappers over the Pallas kernels, with oracle fallback.
+
+``use_pallas`` selects kernel vs pure-jnp path; on this CPU container the
+kernels run via interpret=True (Python execution of the kernel body); on a
+real TPU pass interpret=False. GQA adaptation for flash attention lives
+here (kv heads repeated to q heads before the MHA kernel).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.conv_pipe import conv_pipe
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lrn_pwl import lrn_pwl
+from repro.kernels.matmul_pipe import matmul_pipe
+
+_INTERPRET = True          # flipped to False by launch scripts on real TPU
+
+
+def set_interpret(flag: bool) -> None:
+    global _INTERPRET
+    _INTERPRET = flag
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "stride", "pad", "relu", "pool", "pool_k", "pool_s", "use_pallas",
+    "c_blk", "m_blk"))
+def fused_conv(x, w, b, *, stride=1, pad=0, relu=True, pool=None,
+               pool_k=2, pool_s=2, use_pallas=False, c_blk=8, m_blk=32):
+    if use_pallas:
+        return conv_pipe(x, w, b, stride=stride, pad=pad, relu=relu,
+                         pool=pool, pool_k=pool_k, pool_s=pool_s,
+                         c_blk=c_blk, m_blk=m_blk, interpret=_INTERPRET)
+    return ref.conv_pipe_ref(x, w, b, stride=stride, pad=pad, relu=relu,
+                             pool=pool, pool_k=pool_k, pool_s=pool_s)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "exact"))
+def lrn(x, *, use_pallas=False, exact=False):
+    if exact or not use_pallas:
+        return ref.lrn_ref(x)
+    return lrn_pwl(x, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "use_pallas",
+                                             "bm", "bn", "bk"))
+def fc(x, w, b=None, *, relu=False, use_pallas=False,
+       bm=128, bn=128, bk=128):
+    if use_pallas:
+        if b is None:
+            b = jnp.zeros((w.shape[1],), x.dtype)
+        return matmul_pipe(x, w, b, relu=relu, bm=bm, bn=bn, bk=bk,
+                           interpret=_INTERPRET)
+    return ref.matmul_pipe_ref(x, w, b, relu=relu)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "bq", "bk"))
+def attention(q, k, v, *, use_pallas=False, bq=128, bk=128):
+    """Causal attention, GQA-aware: q (B,Hq,S,D), k/v (B,Hkv,S,D)."""
+    g = q.shape[1] // k.shape[1]
+    if g > 1:                                  # expand kv heads for the MHA kernel
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    if use_pallas:
+        return flash_attention(q, k, v, bq=bq, bk=bk, interpret=_INTERPRET)
+    return ref.flash_attention_ref(q, k, v)

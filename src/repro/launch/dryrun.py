@@ -1,0 +1,381 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes with ShapeDtypeStruct inputs (no allocation), print
+memory/cost analysis, and persist roofline terms.
+
+MUST keep the two lines above as the very first statements — jax locks the
+device count on first initialization.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import roofline as R
+from repro.core.config import ModelConfig, ShapeSpec, applicable_shapes, \
+    get_shape
+from repro.launch.mesh import make_production_mesh, rules_for_mesh
+from repro.models import lm
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import DEFAULT_RULES, param_shardings, \
+    sharding_ctx, spec_for
+from repro.train.steps import TrainState, init_train_state, serve_decode, \
+    serve_prefill, train_step
+from jax.sharding import NamedSharding
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def model_flops_for(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS: 6·N_active·D (train) / 2·N_active·D (serve) plus the
+    attention-over-KV term, which dominates decode and is real model work
+    (score + PV matmuls over the cache; causal halves the full-seq case).
+    """
+    n_active = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * S if shape.kind != "decode" else B
+    mult = 6 if shape.kind == "train" else 2
+    flops = mult * n_active * tokens
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        hq, dh, L = cfg.n_heads, cfg.d_head, cfg.n_layers
+    elif cfg.family == "hybrid":                   # shared attn applications
+        from repro.models.lm import n_shared_attn_apps
+        hq, dh, L = cfg.n_heads, cfg.d_head, n_shared_attn_apps(cfg)
+    else:                                          # ssm: no KV attention
+        hq = dh = L = 0
+    if L:
+        if shape.kind == "decode":                 # q=1 against S cache
+            attn = 4 * B * S * hq * dh * L
+        else:                                      # causal full sequence
+            attn = 4 * B * S * S * hq * dh * L / 2
+            attn *= 3 if shape.kind == "train" else 1   # fwd+bwd
+        flops += attn
+    return float(flops)
+
+
+def _is_axes_leaf(x):
+    """A logical-axes leaf is a plain tuple of axis names (or empty) —
+    NOT a NamedTuple like DecodeCache/KVCache (those are containers)."""
+    return (isinstance(x, tuple) and not hasattr(x, "_fields")
+            and all(e is None or isinstance(e, str) for e in x))
+
+
+def _tree_shardings(tree_of_axes, shapes_tree, mesh, rules):
+    """Map (logical-axes pytree, ShapeDtypeStruct pytree) -> NamedShardings."""
+    def one(axes, sds):
+        if not _is_axes_leaf(axes) or sds.ndim != len(axes):
+            return NamedSharding(mesh, spec_for(sds.shape,
+                                                (None,) * sds.ndim,
+                                                mesh, rules))
+        return NamedSharding(mesh, spec_for(sds.shape, axes, mesh, rules))
+    return jax.tree.map(one, tree_of_axes, shapes_tree,
+                        is_leaf=_is_axes_leaf)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, rules):
+    """Return (jitted fn, arg ShapeDtypeStructs with shardings attached)."""
+    specs = lm.input_specs(cfg, shape)
+    ocfg = AdamWConfig(state_dtype=cfg.opt_state_dtype)
+
+    if shape.kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(jax.random.key(0), cfg, ocfg))
+        pshard = param_shardings(mesh, rules, state_shapes.params)
+        oshard = TrainState(
+            pshard,
+            type(state_shapes.opt)(
+                NamedSharding(mesh, spec_for((), (), mesh, rules)),
+                param_shardings(mesh, rules, state_shapes.opt.m),
+                param_shardings(mesh, rules, state_shapes.opt.v)))
+        batch_ax = lm.batch_logical_axes(cfg, "train")
+        bshard = _tree_shardings(batch_ax, specs, mesh, rules)
+
+        def fn(state, batch):
+            return train_step(state, batch, cfg, ocfg)
+
+        args = (_with_sharding(state_shapes, oshard),
+                _with_sharding(specs, bshard))
+        return fn, args, (0,)
+
+    params_shapes = jax.eval_shape(
+        lambda: lm.init_params(jax.random.key(0), cfg))
+    pshard = param_shardings(mesh, rules, params_shapes)
+
+    if shape.kind == "prefill":
+        batch_ax = lm.batch_logical_axes(cfg, "prefill")
+        bshard = _tree_shardings(batch_ax, specs, mesh, rules)
+
+        def fn(params, batch):
+            return serve_prefill(params, batch, cfg, shape.seq_len)
+        args = (_with_sharding(params_shapes, pshard),
+                _with_sharding(specs, bshard))
+        return fn, args, ()
+
+    # decode
+    batch_ax = lm.batch_logical_axes(cfg, "decode")
+    bshard = _tree_shardings(batch_ax, specs, mesh, rules)
+
+    def fn(params, batch):
+        return serve_decode(params, batch["tokens"], batch["cache"], cfg)
+    args = (_with_sharding(params_shapes, pshard),
+            _with_sharding(specs, bshard))
+    return fn, args, (1,)
+
+
+def _with_sharding(shapes_tree, shardings_tree):
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                             sharding=sh),
+        shapes_tree, shardings_tree)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, unroll: bool = False) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if unroll:      # roofline mode: count every loop iteration in the HLO
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh.size
+    rules = dict(DEFAULT_RULES)
+    rules.update(rules_for_mesh(
+        mesh, seq_shard_batch1=(shape.global_batch == 1)))
+
+    t0 = time.time()
+    with sharding_ctx(mesh, rules):
+        fn, args, donate = build_cell(cfg, shape, mesh, rules)
+        with mesh:
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    rep = R.analyze_compiled(
+        compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+        chips=chips, model_flops=model_flops_for(cfg, shape))
+    result = rep.to_dict()
+    result.update(
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        argument_bytes_per_device=int(mem.argument_size_in_bytes),
+        temp_bytes_per_device=int(mem.temp_size_in_bytes),
+        output_bytes_per_device=int(mem.output_size_in_bytes),
+        alias_bytes_per_device=int(mem.alias_size_in_bytes),
+        n_params=cfg.param_count(), n_active_params=cfg.active_param_count(),
+    )
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+              f"memory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB/device")
+        print(f"[dryrun] cost_analysis: flops/dev={rep.flops_per_device:.3e} "
+              f"bytes/dev={rep.bytes_per_device:.3e} "
+              f"coll_bytes/dev={rep.collective_bytes_per_device:.3e}")
+        print(f"[dryrun] roofline: T_comp={rep.t_compute*1e3:.2f}ms "
+              f"T_mem={rep.t_memory*1e3:.2f}ms "
+              f"T_coll={rep.t_collective*1e3:.2f}ms "
+              f"bottleneck={rep.bottleneck} "
+              f"useful={rep.useful_flops_ratio:.2%} "
+              f"roofline_frac={rep.roofline_fraction:.2%} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    return result
+
+
+def _cost_point(cfg, shape, mesh, rules):
+    """Compile one reduced-depth, fully-unrolled variant; return additive
+    per-device static costs (flops, bytes, collective bytes)."""
+    with sharding_ctx(mesh, rules):
+        fn, args, donate = build_cell(cfg, shape, mesh, rules)
+        with mesh:
+            compiled = jax.jit(fn, donate_argnums=donate).lower(
+                *args).compile()
+    ca = compiled.cost_analysis()
+    coll = R.collective_bytes_from_hlo(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": float(sum(coll.values())),
+            "coll_breakdown": coll}
+
+
+def run_cell_scaled(arch: str, shape_name: str, verbose: bool = True,
+                    cfg_over: dict = None, rules_over: dict = None) -> dict:
+    """Roofline via layer-count extrapolation (single-pod only).
+
+    XLA counts a scan body once, and fully unrolling 64 layers is
+    compile-prohibitive on one CPU core. But layer stacks are homogeneous:
+    compiling UNROLLED variants at 2-3 small depths and solving
+        cost(L) = outside + L * per_layer            (transformers, pairs)
+        cost(L) = outside + L * mamba + A(L) * attn  (zamba2 hybrid)
+    gives the exact full-depth static costs (flops / bytes / collective
+    bytes are additive over instructions). Inner chunk loops (attention KV,
+    SSD chunks, mLSTM chunks) unroll inside each measured layer, so they
+    are counted exactly. Residual once-counting remains only for the sLSTM
+    per-step scan (<2% of xlstm flops; documented).
+
+    Memory figures come from the full-depth scan-mode compile (exact).
+    """
+    import dataclasses
+    cfg = get_config(arch)
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=False)
+    rules = dict(DEFAULT_RULES)
+    rules.update(rules_for_mesh(
+        mesh, seq_shard_batch1=(shape.global_batch == 1)))
+    if rules_over:
+        rules.update(rules_over)
+
+    t0 = time.time()
+    kw = {}
+    # SSD/mLSTM chunk tiling for long-sequence roofline cells: Q=512 keeps
+    # the unrolled chunk count compile-tractable (64/layer at 32k) and is
+    # the MXU-friendly tile on real TPU; intra-chunk flops are <2% of the
+    # Mamba block either way (documented in EXPERIMENTS.md).
+    if cfg.is_ssm and (shape.seq_len > 8192 or cfg.family == "hybrid"):
+        kw["ssm_chunk"] = 512
+    red = lambda L: dataclasses.replace(cfg, n_layers=L, scan_layers=False,
+                                        **kw)
+    if cfg.family == "hybrid":
+        # attn applications A(L) for attn_every=6: L=1 -> 1, L=6 -> 1, L=7 -> 2
+        c1 = _cost_point(red(1), shape, mesh, rules)
+        c6 = _cost_point(red(6), shape, mesh, rules)
+        c7 = _cost_point(red(7), shape, mesh, rules)
+        A_full = len(range(0, cfg.n_layers, cfg.attn_every))
+
+        def extrap(key):
+            m = (c6[key] - c1[key]) / 5.0
+            a = c7[key] - c6[key] - m
+            o = c1[key] - m - a
+            return o + cfg.n_layers * m + A_full * a
+        points = (c1, c6, c7)
+    else:
+        step = 2 if cfg.family != "ssm" else 2     # pairs also scan in 2s
+        L1, L2 = step, 2 * step
+        c1 = _cost_point(red(L1), shape, mesh, rules)
+        c2 = _cost_point(red(L2), shape, mesh, rules)
+
+        def extrap(key):
+            per = (c2[key] - c1[key]) / (L2 - L1)
+            o = c1[key] - L1 * per
+            return o + cfg.n_layers * per
+        points = (c1, c2)
+
+    flops = max(0.0, extrap("flops"))
+    byts = max(0.0, extrap("bytes"))
+    coll = max(0.0, extrap("coll"))
+    coll_bd = {}
+    for k in points[0]["coll_breakdown"]:
+        # per-kind extrapolation using the same solver
+        vals = [p["coll_breakdown"][k] for p in points]
+        if cfg.family == "hybrid":
+            m = (vals[1] - vals[0]) / 5.0
+            a = vals[2] - vals[1] - m
+            o = vals[0] - m - a
+            coll_bd[k] = int(max(0, o + cfg.n_layers * m + A_full * a))
+        else:
+            per = (vals[1] - vals[0]) / (L2 - L1)
+            coll_bd[k] = int(max(0, vals[0] - L1 * per
+                                 + cfg.n_layers * per))
+
+    # exact full-depth memory from the scan-mode artifact
+    base_file = OUT_DIR / f"baseline__{arch}__{shape_name}__pod16x16.json"
+    mem = json.loads(base_file.read_text()) if base_file.exists() else {}
+
+    rep = R.RooflineReport(
+        arch=arch, shape=shape_name, mesh="pod16x16", chips=mesh.size,
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes_per_device=coll, coll_breakdown=coll_bd,
+        peak_memory_per_device=float(
+            mem.get("argument_bytes_per_device", 0)
+            + mem.get("temp_bytes_per_device", 0)),
+        model_flops=model_flops_for(cfg, shape))
+    result = rep.to_dict()
+    result.update(
+        method="layer_extrapolation",
+        points=[{k: p[k] for k in ("flops", "bytes", "coll")}
+                for p in points],
+        compile_s=round(time.time() - t0, 1),
+        argument_bytes_per_device=mem.get("argument_bytes_per_device", 0),
+        temp_bytes_per_device=mem.get("temp_bytes_per_device", 0),
+        n_params=cfg.param_count(),
+        n_active_params=cfg.active_param_count())
+    if verbose:
+        print(f"[roofline] {arch} x {shape_name}: "
+              f"T_comp={rep.t_compute*1e3:.2f}ms T_mem={rep.t_memory*1e3:.2f}ms "
+              f"T_coll={rep.t_collective*1e3:.2f}ms bound={rep.bottleneck} "
+              f"useful={rep.useful_flops_ratio:.1%} "
+              f"frac={rep.roofline_fraction:.2%} "
+              f"({result['compile_s']}s)")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll structural loops for exact cost analysis")
+    ap.add_argument("--scaled", action="store_true",
+                    help="roofline via layer-count extrapolation (fast)")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    cells = []
+    meshes = [True, False] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            for shape in applicable_shapes(cfg):
+                for mp in meshes:
+                    cells.append((arch, shape.name, mp))
+    else:
+        assert args.arch and args.shape
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    failures = []
+    for arch, shape, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        out = OUT_DIR / f"{args.tag}__{arch}__{shape}__{mesh_name}.json"
+        if args.skip_existing and out.exists():
+            print(f"[dryrun] skip {out.name} (exists)")
+            continue
+        try:
+            if args.scaled:
+                result = run_cell_scaled(arch, shape)
+            else:
+                result = run_cell(arch, shape, mp, unroll=args.unroll)
+            out.write_text(json.dumps(result, indent=1))
+        except Exception as e:
+            failures.append((arch, shape, mesh_name, repr(e)))
+            print(f"[dryrun] FAIL {arch} x {shape} x {mesh_name}: {e}")
+            traceback.print_exc(limit=6)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", *f)
+        raise SystemExit(1)
+    print("\nall dry-run cells green")
+
+
+if __name__ == "__main__":
+    main()

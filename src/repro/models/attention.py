@@ -1,0 +1,193 @@
+"""GQA attention: chunked online-softmax (flash-style) + decode with KV cache.
+
+The chunked path is the pure-XLA realization of the PipeCNN pipeline idea for
+attention: the (S x S) score matrix is never materialized in HBM — scores for
+one KV chunk live only inside the scan body ("in VMEM"), exactly as PipeCNN's
+inter-stage data lives in channels. The Pallas `flash_attention` kernel in
+``repro/kernels`` is the TPU-native version; this module is the lowering used
+by the CPU dry-run and the oracle for that kernel.
+
+Weights are stored FLAT — (D, Hq*dh) etc. — so jit argument shardings stay
+divisible by the mesh (head counts like Arctic's 56 do not divide TP=16, flat
+dims always do). Head splits happen in compute, where uneven GSPMD sharding
+of intermediates is legal.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm
+from repro.parallel.sharding import shard
+
+NEG_INF = -1e30
+
+
+def init_attn_params(key, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * dh), dtype),
+        "wk": dense_init(ks[1], (d, hkv * dh), dtype),
+        "wv": dense_init(ks[2], (d, hkv * dh), dtype),
+        "wo": dense_init(ks[3], (hq * dh, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    """x (B,S,D) -> q (B,S,Hq,dh), k/v (B,S,Hkv,dh), rope + qk_norm applied."""
+    B, S, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (x @ p["wq"]).reshape(B, S, hq, dh)
+    k = (x @ p["wk"]).reshape(B, S, hkv, dh)
+    v = (x @ p["wv"]).reshape(B, S, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", None, None)
+    v = shard(v, "batch", "seq", None, None)
+    return q, k, v
+
+
+def _sdpa_naive(q, k, v, cfg: ModelConfig, causal: bool = True):
+    """Reference full-matrix attention (smoke tests / oracle)."""
+    B, Sq, hq, dh = q.shape
+    Sk = k.shape[1]
+    g = hq // k.shape[2]                        # GQA group size
+    qg = q.reshape(B, Sq, k.shape[2], g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask, s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", pattn, v.astype(jnp.float32))
+    return o.reshape(B, Sq, hq, dh).astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, cfg: ModelConfig):
+    """Online-softmax causal attention, scanned over KV chunks.
+
+    Never materializes (Sq x Sk); per-step live memory is O(Sq * chunk).
+    """
+    B, Sq, hq, dh = q.shape
+    Sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    C = min(cfg.attn_chunk, Sk)
+    if Sk % C:      # pad KV to a chunk multiple; causal mask hides the pad
+        pad = C - Sk % C
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Sk += pad
+    n_chunks = Sk // C
+
+    qg = q.reshape(B, Sq, hkv, g, dh)
+    q_pos = jnp.arange(Sq)
+    kc = k.reshape(B, n_chunks, C, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, C, hkv, dh).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inputs):
+        m_prev, l_prev, acc = carry
+        kj, vj, j = inputs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kj,
+                       preferred_element_type=jnp.float32)
+        s = s / np.sqrt(dh)
+        k_pos = j * C + jnp.arange(C)
+        mask = q_pos[:, None] >= k_pos[None, :]            # causal
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m_prev - m_new)
+        l_new = l_prev * scale + jnp.sum(p, axis=-1)
+        acc = acc * scale[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, hkv, g, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, hkv, g, Sq), jnp.float32)
+    a0 = jnp.zeros((B, hkv, g, Sq, dh), jnp.float32)
+    from repro.models.layers import scan_or_unroll
+    (m, l, acc), _ = scan_or_unroll(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)),
+        use_scan=cfg.scan_layers)
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, hq, dh).astype(q.dtype)
+
+
+def attn_forward(p, x, cfg: ModelConfig,
+                 positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence causal attention (training / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if cfg.attention_impl == "naive" or S <= min(cfg.attn_chunk, 1024):
+        o = _sdpa_naive(q, k, v, cfg)
+    else:
+        o = _sdpa_chunked(q, k, v, cfg)
+    o = shard(o, "batch", "seq", "heads", None)
+    return o.reshape(B, S, cfg.n_heads * cfg.d_head) @ p["wo"]
+
+
+class KVCache(NamedTuple):
+    """Per-layer KV cache. Sequence dim is sharded over the TP ('model')
+    axis — kv_heads (8) never divide TP (16); seq always does (SP decode)."""
+    k: jax.Array                     # (B, S_max, hkv, dh)
+    v: jax.Array
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, s_max: int, dtype,
+                  n_layers: Optional[int] = None) -> KVCache:
+    shape = ((n_layers,) if n_layers else ()) + (
+        batch, s_max, cfg.n_kv_heads, cfg.d_head)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attn_decode(p, x, cfg: ModelConfig, cache: KVCache,
+                pos: jax.Array) -> Tuple[jax.Array, KVCache]:
+    """One-token decode. x (B,1,D); pos scalar int32 (tokens so far)."""
+    B = x.shape[0]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    positions = jnp.broadcast_to(pos[None], (B, 1)).astype(jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+
+    # Masked write, NOT dynamic_update_slice: a runtime-dynamic update
+    # along the model-sharded seq axis makes GSPMD all-gather the whole
+    # cache per layer (~30x the cache bytes — §Perf decode iteration 2).
+    # The select is elementwise => shard-local on every axis.
+    S = cache.k.shape[1]
+    at_pos = (jnp.arange(S) == pos)[None, :, None, None]
+    ck = jnp.where(at_pos, k.astype(cache.k.dtype), cache.k)
+    cv = jnp.where(at_pos, v.astype(cache.v.dtype), cache.v)
+    ck = shard(ck, "batch", "kvseq", None, None)
+    cv = shard(cv, "batch", "kvseq", None, None)
+
+    g = hq // hkv
+    # bf16 operands + fp32 ACCUMULATION (preferred_element_type): the MXU
+    # accumulates natively — converting the cache to f32 would double the
+    # cache-read bytes and materialize an f32 copy (§Perf decode iteration)
+    qg = q.reshape(B, hkv, g, dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, ck,
+                   preferred_element_type=jnp.float32) / np.sqrt(dh)
+    valid = (jnp.arange(S) <= pos)[None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    # softmax over the (sharded) cache axis: XLA turns the reductions into
+    # cheap partial-reduce + all-reduce over the model axis (SP decode).
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", pattn.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, hq * dh).astype(x.dtype)
+    return o @ p["wo"], KVCache(ck, cv)

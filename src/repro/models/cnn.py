@@ -1,0 +1,118 @@
+"""CNN model stack: AlexNet / VGG-16 through the PipeCNN fused pipeline.
+
+``cnn_forward`` executes the layer list with PipeCNN's stage grouping:
+consecutive conv(+relu)+pool pairs run as ONE fused kernel (the paper's
+Conv->Pool channel), LRN runs as its own kernel off the pipeline (the paper
+implements LRN separately because of its multi-map access pattern), and FC
+layers run through the multi-mode engine in batched-FC mode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import CNNConfig, ConvLayer
+from repro.kernels import ops
+from repro.models.layers import dense_init
+
+
+def init_cnn_params(key, cfg: CNNConfig) -> List[Dict[str, Any]]:
+    """Per-layer param list aligned with cfg.layers (None for pool/lrn)."""
+    params: List[Any] = []
+    c = cfg.input_ch
+    hw = cfg.input_hw
+    dtype = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+    for l in cfg.layers:
+        if l.kind == "conv":
+            key, k1 = jax.random.split(key)
+            cg = c // l.groups
+            fan_in = l.kernel * l.kernel * cg
+            w = (jax.random.normal(k1, (l.kernel, l.kernel, cg, l.out_ch),
+                                   jnp.float32)
+                 * np.sqrt(2.0 / fan_in)).astype(dtype)
+            params.append({"w": w, "b": jnp.zeros((l.out_ch,), dtype)})
+            hw = (hw + 2 * l.pad - l.kernel) // l.stride + 1
+            c = l.out_ch
+        elif l.kind == "pool":
+            params.append(None)
+            hw = (hw - l.kernel) // l.stride + 1
+        elif l.kind == "lrn":
+            params.append(None)
+        elif l.kind == "fc":
+            key, k1 = jax.random.split(key)
+            fan_in = c * hw * hw
+            params.append({
+                "w": dense_init(k1, (fan_in, l.out_ch), dtype),
+                "b": jnp.zeros((l.out_ch,), dtype)})
+            hw, c = 1, l.out_ch
+    return params
+
+
+def fuse_plan(cfg: CNNConfig) -> List[Tuple[int, ...]]:
+    """Group layer indices into PipeCNN pipeline stages.
+
+    conv immediately followed by pool  -> fused (conv+pool) kernel launch;
+    lrn stays standalone (off-pipeline, as in the paper); fc standalone.
+    """
+    plan: List[Tuple[int, ...]] = []
+    i = 0
+    ls = cfg.layers
+    while i < len(ls):
+        if (ls[i].kind == "conv" and i + 1 < len(ls)
+                and ls[i + 1].kind == "pool"):
+            plan.append((i, i + 1))
+            i += 2
+        else:
+            plan.append((i,))
+            i += 1
+    return plan
+
+
+def cnn_forward(params, x: jax.Array, cfg: CNNConfig, *,
+                use_pallas: bool = False, fused: bool = True) -> jax.Array:
+    """x (B, H, W, C) -> logits (B, n_classes)."""
+    plan = fuse_plan(cfg) if fused else [(i,) for i in range(len(cfg.layers))]
+    c_blk = cfg.vec_size
+    m_blk = max(8, cfg.cu_num)
+    for group in plan:
+        l = cfg.layers[group[0]]
+        p = params[group[0]]
+        if l.kind == "conv":
+            pool = cfg.layers[group[1]] if len(group) == 2 else None
+            kw = dict(stride=l.stride, pad=l.pad, relu=l.relu,
+                      pool=(pool.pool if pool else None),
+                      pool_k=(pool.kernel if pool else 2),
+                      pool_s=(pool.stride if pool else 2),
+                      use_pallas=use_pallas, c_blk=c_blk, m_blk=m_blk)
+            if l.groups == 1:
+                x = ops.fused_conv(x, p["w"], p["b"], **kw)
+            else:   # AlexNet two-tower convs: per-group fused kernels
+                g = l.groups
+                cg = x.shape[-1] // g
+                mg = l.out_ch // g
+                x = jnp.concatenate([
+                    ops.fused_conv(
+                        x[..., i * cg:(i + 1) * cg],
+                        p["w"][..., i * mg:(i + 1) * mg],
+                        p["b"][i * mg:(i + 1) * mg], **kw)
+                    for i in range(g)], axis=-1)
+        elif l.kind == "pool":
+            from repro.kernels.ref import pool_ref
+            x = pool_ref(x, l.pool, l.kernel, l.stride)
+        elif l.kind == "lrn":
+            x = ops.lrn(x, use_pallas=use_pallas)
+        elif l.kind == "fc":
+            B = x.shape[0]
+            x = x.reshape(B, -1)
+            x = ops.fc(x, p["w"], p["b"], relu=l.relu, use_pallas=use_pallas,
+                       bk=128 * max(1, cfg.vec_size // 8),
+                       bn=128 * max(1, cfg.cu_num // 8))
+    return x
+
+
+def classification_flops(cfg: CNNConfig) -> int:
+    from repro.core.config import flops_per_image
+    return flops_per_image(cfg)

@@ -1,0 +1,125 @@
+"""Shared neural-net building blocks (pure-functional JAX)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers (fan-in scaled normal, matching common LM practice)
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with fp32 statistics regardless of activation dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    half = d_head // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, d_head); positions: (..., seq) int32."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                       # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]                  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def swiglu(gate_up: jax.Array) -> jax.Array:
+    """Fused gate+up projection output -> SiLU(gate) * up."""
+    gate, up = jnp.split(gate_up, 2, axis=-1)
+    return jax.nn.silu(gate) * up
+
+
+# ---------------------------------------------------------------------------
+# scan-or-unroll: structural loops that the roofline dry-run can unroll
+# ---------------------------------------------------------------------------
+
+def scan_or_unroll(body, carry, xs, use_scan: bool, length: Optional[int] = None):
+    """lax.scan when ``use_scan`` else a python loop (same semantics).
+
+    XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    count; the roofline dry-run sets scan_layers=False so every structural
+    loop (layers, KV chunks, SSD chunks) unrolls and is counted exactly.
+    """
+    if use_scan:
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = ys[0] if ys else None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Cross entropy (vocab-sharded friendly: plain reductions, fp32 math)
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token NLL. logits (..., V) any dtype; labels (...) int32.
+
+    Vocab-sharding friendly: the gold logit is extracted with a masked
+    reduction (iota == label) instead of take_along_axis, so a vocab dim
+    sharded over the TP axis reduces locally + one scalar all-reduce —
+    GSPMD never all-gathers the logits.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], shifted, 0.0),
+                   axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,532 @@
+"""Unified LM: one functional model covering all ten assigned architectures.
+
+Families:
+  dense / vlm / audio  -> pre-norm GQA transformer (qk_norm optional);
+                          vlm/audio prepend stubbed frontend embeddings.
+  moe                  -> transformer with capacity-dispatch MoE FFN
+                          (+ Arctic's parallel dense residual).
+  ssm (xLSTM)          -> alternating mLSTM / sLSTM pairs (scan over pairs).
+  hybrid (Zamba2)      -> Mamba2 stack with ONE SHARED attention+MLP block
+                          applied every ``attn_every`` layers.
+
+Layers are scan-stacked (identical pytree structure per scanned step) so the
+HLO stays small enough to compile 64-layer models on 512 placeholder devices.
+Vocab is padded to a multiple of 256 for shardability (InternVL2's 92,553 is
+odd); the pad columns are masked out of the loss and the decode argmax.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ModelConfig, ShapeSpec
+from repro.models import ssm as S
+from repro.models.attention import (KVCache, attn_decode, attn_forward,
+                                    init_attn_params, init_kv_cache)
+from repro.models.layers import (cross_entropy, dense_init, dtype_of,
+                                 embed_init, rms_norm, scan_or_unroll)
+from repro.models.mlp import init_mlp_params, init_moe_params, mlp_forward, \
+    moe_forward
+from repro.parallel.sharding import shard
+
+VOCAB_ALIGN = 256
+
+
+def maybe_remat(body, cfg: ModelConfig):
+    """Per-layer activation checkpointing with a configurable policy.
+
+    "full": recompute everything in the backward pass (min memory, max
+    recompute — also re-issues the FSDP weight all-gathers in bwd).
+    "dots": save matmul outputs (jax.checkpoint_policies
+    .dots_with_no_batch_dims_saveable) — cuts the recompute FLOPs and the
+    re-gather collective bytes at higher activation memory (§Perf lever).
+    """
+    if not cfg.remat:
+        return body
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+
+def vocab_padded(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab // VOCAB_ALIGN) * VOCAB_ALIGN
+
+
+# ===========================================================================
+# Parameter initialization
+# ===========================================================================
+
+def _init_transformer_block(key, cfg: ModelConfig, dtype):
+    ka, km = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attn_params(ka, cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.is_moe:
+        p["moe"] = init_moe_params(km, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp_params(km, cfg, dtype)
+    return p
+
+
+def _init_hybrid_block(key, cfg: ModelConfig, dtype):
+    return {
+        "ln": jnp.ones((cfg.d_model,), dtype),
+        "mamba": S.init_mamba_params(key, cfg, dtype),
+    }
+
+
+def _init_xlstm_pair(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln_m": jnp.ones((cfg.d_model,), dtype),
+        "mlstm": S.init_mlstm_params(k1, cfg, dtype),
+        "ln_s": jnp.ones((cfg.d_model,), dtype),
+        "slstm": S.init_slstm_params(k2, cfg, dtype),
+    }
+
+
+def n_scan_steps(cfg: ModelConfig) -> int:
+    if cfg.family == "ssm":
+        assert cfg.n_layers % 2 == 0, "xLSTM alternates in pairs"
+        return cfg.n_layers // 2
+    return cfg.n_layers
+
+
+def n_shared_attn_apps(cfg: ModelConfig) -> int:
+    if cfg.attn_every:
+        return len(range(0, cfg.n_layers, cfg.attn_every))
+    return 0
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.dtype)
+    Vp = vocab_padded(cfg)
+    keys = jax.random.split(key, 6)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], (Vp, cfg.d_model), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(keys[1], (cfg.d_model, Vp), dtype),
+    }
+    if cfg.frontend:
+        params["frontend_proj"] = dense_init(
+            keys[2], (cfg.d_model, cfg.d_model), dtype)
+
+    block_init = {
+        "dense": _init_transformer_block, "vlm": _init_transformer_block,
+        "audio": _init_transformer_block, "moe": _init_transformer_block,
+        "hybrid": _init_hybrid_block, "ssm": _init_xlstm_pair,
+    }[cfg.family]
+    bkeys = jax.random.split(keys[3], n_scan_steps(cfg))
+    params["blocks"] = jax.vmap(
+        lambda k: block_init(k, cfg, dtype))(bkeys)
+
+    if cfg.attn_every:  # Zamba2: the single shared attention+MLP block
+        ks = jax.random.split(keys[4])
+        params["shared"] = {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": init_attn_params(ks[0], cfg, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": init_mlp_params(ks[1], cfg, dtype),
+        }
+    return params
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count via eval_shape (no memory allocated)."""
+    shapes = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(shapes):
+        n = int(np.prod(leaf.shape))
+        if active_only and any(
+                getattr(e, "key", None) in ("moe_wi", "moe_wdown")
+                for e in path):
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return total
+
+
+# ===========================================================================
+# Forward (train / prefill)
+# ===========================================================================
+
+def _embed_tokens(params, tokens, frontend_embed, cfg: ModelConfig):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend:
+        fe = frontend_embed.astype(x.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([fe, x], axis=1)
+    return shard(x, "batch", "seq", "embed")
+
+
+def _transformer_block_fwd(bp, x, cfg: ModelConfig, positions):
+    h = attn_forward(bp["attn"], rms_norm(x, bp["ln1"], cfg.norm_eps),
+                     cfg, positions)
+    x = x + h
+    inner = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        f, aux = moe_forward(bp["moe"], inner, cfg)
+    else:
+        f, aux = mlp_forward(bp["mlp"], inner), jnp.zeros((), jnp.float32)
+    x = x + f
+    return shard(x, "batch", "seq", "embed"), aux
+
+
+def _shared_block_fwd(sp, x, cfg: ModelConfig, positions):
+    x = x + attn_forward(sp["attn"], rms_norm(x, sp["ln1"], cfg.norm_eps),
+                         cfg, positions)
+    x = x + mlp_forward(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps))
+    return x
+
+
+def forward(params, tokens, cfg: ModelConfig,
+            frontend_embed: Optional[jax.Array] = None,
+            return_aux: bool = False):
+    """Full-sequence forward -> logits (B, S_total, V_padded)[, aux]."""
+    x = _embed_tokens(params, tokens, frontend_embed, cfg)
+    B, Stot, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(Stot), (B, Stot))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        def body(x, bp):
+            return _transformer_block_fwd(bp, x, cfg, positions)
+        body = maybe_remat(body, cfg)
+        x, auxs = scan_or_unroll(body, x, params["blocks"],
+                                 use_scan=cfg.scan_layers)
+        aux_total = jnp.sum(auxs)
+
+    elif cfg.family == "hybrid":
+        flags = (jnp.arange(cfg.n_layers) % cfg.attn_every) == 0
+        sp = params["shared"]
+
+        def body(x, inp):
+            bp, flag = inp
+            x = jax.lax.cond(
+                flag, lambda v: _shared_block_fwd(sp, v, cfg, positions),
+                lambda v: v, x)
+            h, _ = S.mamba_forward(bp["mamba"],
+                                   rms_norm(x, bp["ln"], cfg.norm_eps), cfg)
+            return shard(x + h, "batch", "seq", "embed"), None
+        body = maybe_remat(body, cfg)
+        x, _ = scan_or_unroll(body, x, (params["blocks"], flags),
+                              use_scan=cfg.scan_layers)
+
+    elif cfg.family == "ssm":
+        def body(x, bp):
+            h, _ = S.mlstm_forward(bp["mlstm"],
+                                   rms_norm(x, bp["ln_m"], cfg.norm_eps), cfg)
+            x = x + h
+            h, _ = S.slstm_forward(bp["slstm"],
+                                   rms_norm(x, bp["ln_s"], cfg.norm_eps), cfg)
+            return shard(x + h, "batch", "seq", "embed"), None
+        body = maybe_remat(body, cfg)
+        x, _ = scan_or_unroll(body, x, params["blocks"],
+                              use_scan=cfg.scan_layers)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    logits = shard(logits, "batch", "seq", "vocab")
+    if return_aux:
+        return logits, aux_total
+    return logits
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            aux_weight: float = 0.01) -> jax.Array:
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          batch.get("frontend_embed"), return_aux=True)
+    if cfg.frontend:                    # loss only over the token positions
+        logits = logits[:, cfg.frontend_len:]
+    # mask padded vocab columns out of the softmax
+    Vp = logits.shape[-1]
+    pad_mask = (jnp.arange(Vp) >= cfg.vocab) * (-1e30)
+    loss = cross_entropy(logits + pad_mask, batch["labels"])
+    return loss + aux_weight * aux
+
+
+# ===========================================================================
+# Serving: prefill + decode with caches
+# ===========================================================================
+
+class DecodeCache(NamedTuple):
+    """Unified cache across families (unused fields are size-0 arrays)."""
+    kv: Any                 # KVCache, stacked (L, ...)  [transformer fams]
+    mamba: Any              # MambaState, stacked (L, ...) [hybrid]
+    mlstm: Any              # MLSTMState stacked (L/2,...) [ssm]
+    slstm: Any              # SLSTMState stacked (L/2,...) [ssm]
+    shared_kv: Any          # KVCache (A, ...) for the shared block [hybrid]
+    pos: jax.Array          # scalar int32: tokens decoded so far
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, s_max: int) -> DecodeCache:
+    dtype = dtype_of(cfg.dtype)
+    L = cfg.n_layers
+    empty = jnp.zeros((0,), dtype)
+    kv = mamba = mlstm = slstm = shared = empty
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        kv = init_kv_cache(cfg, batch, s_max, dtype, n_layers=L)
+    elif cfg.family == "hybrid":
+        mamba = jax.vmap(lambda _: S.init_mamba_state(cfg, batch, dtype))(
+            jnp.arange(L))
+        shared = init_kv_cache(cfg, batch, s_max, dtype,
+                               n_layers=n_shared_attn_apps(cfg))
+    elif cfg.family == "ssm":
+        half = L // 2
+        mlstm = jax.vmap(lambda _: S.init_mlstm_state(cfg, batch))(
+            jnp.arange(half))
+        slstm = jax.vmap(lambda _: S.init_slstm_state(cfg, batch))(
+            jnp.arange(half))
+    return DecodeCache(kv, mamba, mlstm, slstm, shared,
+                       jnp.zeros((), jnp.int32))
+
+
+def decode_step(params, tokens, cache: DecodeCache, cfg: ModelConfig
+                ) -> Tuple[jax.Array, DecodeCache]:
+    """One decode step: tokens (B, 1) -> (logits (B, 1, Vp), new cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, "batch", "seq", "embed")
+    pos = cache.pos
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        def body(x, inp):
+            bp, ck, cv = inp
+            h, new_kv = attn_decode(
+                bp["attn"], rms_norm(x, bp["ln1"], cfg.norm_eps), cfg,
+                KVCache(ck, cv), pos)
+            x = x + h
+            inner = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                f, _ = moe_forward(bp["moe"], inner, cfg)
+            else:
+                f = mlp_forward(bp["mlp"], inner)
+            return x + f, (new_kv.k, new_kv.v)
+        x, (ks, vs) = scan_or_unroll(
+            body, x, (params["blocks"], cache.kv.k, cache.kv.v),
+            use_scan=cfg.scan_layers)
+        cache = cache._replace(kv=KVCache(ks, vs))
+
+    elif cfg.family == "hybrid":
+        flags = (jnp.arange(cfg.n_layers) % cfg.attn_every) == 0
+        app_idx_of = jnp.cumsum(flags.astype(jnp.int32)) - 1
+        sp = params["shared"]
+
+        def body(carry, inp):
+            x, sh_k, sh_v = carry
+            bp, mst, flag, app_idx = inp
+
+            def with_attn(x, sh_k, sh_v):
+                ck = jax.lax.dynamic_index_in_dim(sh_k, app_idx, 0, False)
+                cv = jax.lax.dynamic_index_in_dim(sh_v, app_idx, 0, False)
+                h, new_kv = attn_decode(
+                    sp["attn"], rms_norm(x, sp["ln1"], cfg.norm_eps), cfg,
+                    KVCache(ck, cv), pos)
+                x = x + h
+                x = x + mlp_forward(sp["mlp"],
+                                    rms_norm(x, sp["ln2"], cfg.norm_eps))
+                sh_k = jax.lax.dynamic_update_index_in_dim(
+                    sh_k, new_kv.k, app_idx, 0)
+                sh_v = jax.lax.dynamic_update_index_in_dim(
+                    sh_v, new_kv.v, app_idx, 0)
+                return x, sh_k, sh_v
+
+            x, sh_k, sh_v = jax.lax.cond(
+                flag, with_attn, lambda x, a, b: (x, a, b), x, sh_k, sh_v)
+            h, new_st = S.mamba_decode(
+                bp["mamba"], rms_norm(x, bp["ln"], cfg.norm_eps), cfg, mst)
+            return (x + h, sh_k, sh_v), new_st
+
+        (x, sh_k, sh_v), new_states = scan_or_unroll(
+            body, (x, cache.shared_kv.k, cache.shared_kv.v),
+            (params["blocks"], cache.mamba, flags, app_idx_of),
+            use_scan=cfg.scan_layers)
+        cache = cache._replace(mamba=new_states,
+                               shared_kv=KVCache(sh_k, sh_v))
+
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            bp, mst, sst = inp
+            h, mst = S.mlstm_decode(
+                bp["mlstm"], rms_norm(x, bp["ln_m"], cfg.norm_eps), cfg, mst)
+            x = x + h
+            h, sst = S.slstm_decode(
+                bp["slstm"], rms_norm(x, bp["ln_s"], cfg.norm_eps), cfg, sst)
+            return x + h, (mst, sst)
+        x, (msts, ssts) = scan_or_unroll(
+            body, x, (params["blocks"], cache.mlstm, cache.slstm),
+            use_scan=cfg.scan_layers)
+        cache = cache._replace(mlstm=msts, slstm=ssts)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return logits, cache._replace(pos=pos + 1)
+
+
+def prefill(params, tokens, cfg: ModelConfig, s_max: int,
+            frontend_embed: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, DecodeCache]:
+    """Process a full prompt, build the decode cache, return last logits.
+
+    For transformer families the KV cache is populated; recurrent families
+    carry their final states.  (Used by serve.py and the prefill dry-run.)
+    """
+    B = tokens.shape[0]
+    cache = init_decode_cache(cfg, B, s_max)
+    x = _embed_tokens(params, tokens, frontend_embed, cfg)
+    Stot = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(Stot), (B, Stot))
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        from repro.models.attention import _project_qkv
+
+        def body(x, inp):
+            bp, ck, cv = inp
+            normed = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            h = attn_forward(bp["attn"], normed, cfg, positions)
+            q, k, v = _project_qkv(bp["attn"], normed, cfg, positions)
+            ck = jax.lax.dynamic_update_slice(ck, k, (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v, (0, 0, 0, 0))
+            x = x + h
+            inner = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                f, _ = moe_forward(bp["moe"], inner, cfg)
+            else:
+                f = mlp_forward(bp["mlp"], inner)
+            return x + f, (ck, cv)
+        body = maybe_remat(body, cfg)
+        x, (ks, vs) = scan_or_unroll(
+            body, x, (params["blocks"], cache.kv.k, cache.kv.v),
+            use_scan=cfg.scan_layers)
+        cache = cache._replace(kv=KVCache(ks, vs))
+
+    elif cfg.family == "hybrid":
+        flags = (jnp.arange(cfg.n_layers) % cfg.attn_every) == 0
+        app_idx_of = jnp.cumsum(flags.astype(jnp.int32)) - 1
+        sp = params["shared"]
+        from repro.models.attention import _project_qkv
+
+        def body(carry, inp):
+            x, sh_k, sh_v = carry
+            bp, flag, app_idx = inp
+
+            def with_attn(x, sh_k, sh_v):
+                normed = rms_norm(x, sp["ln1"], cfg.norm_eps)
+                h = attn_forward(sp["attn"], normed, cfg, positions)
+                _, k, v = _project_qkv(sp["attn"], normed, cfg, positions)
+                pad = sh_k.shape[2] - k.shape[1]
+                kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                sh_k = jax.lax.dynamic_update_index_in_dim(
+                    sh_k, kp, app_idx, 0)
+                sh_v = jax.lax.dynamic_update_index_in_dim(
+                    sh_v, vp, app_idx, 0)
+                x = x + h
+                x = x + mlp_forward(sp["mlp"],
+                                    rms_norm(x, sp["ln2"], cfg.norm_eps))
+                return x, sh_k, sh_v
+
+            x, sh_k, sh_v = jax.lax.cond(
+                flag, with_attn, lambda x, a, b: (x, a, b), x, sh_k, sh_v)
+            h, st = S.mamba_forward(
+                bp["mamba"], rms_norm(x, bp["ln"], cfg.norm_eps), cfg)
+            return (x + h, sh_k, sh_v), st
+        body = maybe_remat(body, cfg)
+        (x, sh_k, sh_v), states = scan_or_unroll(
+            body, (x, cache.shared_kv.k, cache.shared_kv.v),
+            (params["blocks"], flags, app_idx_of),
+            use_scan=cfg.scan_layers)
+        cache = cache._replace(mamba=states, shared_kv=KVCache(sh_k, sh_v))
+
+    elif cfg.family == "ssm":
+        def body(x, bp):
+            h, mst = S.mlstm_forward(
+                bp["mlstm"], rms_norm(x, bp["ln_m"], cfg.norm_eps), cfg)
+            x = x + h
+            h, sst = S.slstm_forward(
+                bp["slstm"], rms_norm(x, bp["ln_s"], cfg.norm_eps), cfg)
+            return x + h, (mst, sst)
+        body = maybe_remat(body, cfg)
+        x, (msts, ssts) = scan_or_unroll(body, x, params["blocks"],
+                                         use_scan=cfg.scan_layers)
+        cache = cache._replace(mlstm=msts, slstm=ssts)
+
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return logits, cache._replace(pos=jnp.asarray(Stot, jnp.int32))
+
+
+def cache_logical_axes(cfg: ModelConfig) -> "DecodeCache":
+    """DecodeCache-shaped pytree of logical-axis tuples (for shardings).
+
+    Mirrors init_decode_cache's structure exactly; leaves are tuples of
+    logical axis names consumed by parallel.sharding.spec_for.
+    """
+    kv_ax = KVCache(("layers", "batch", "kvseq", None, None),
+                    ("layers", "batch", "kvseq", None, None))
+    none = ()
+    kv = mamba = mlstm = slstm = shared = none
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        kv = kv_ax
+    elif cfg.family == "hybrid":
+        mamba = S.MambaState(("layers", "batch", "heads", None, None),
+                             ("layers", "batch", None, "ffn"))
+        shared = kv_ax
+    elif cfg.family == "ssm":
+        mlstm = S.MLSTMState(("layers", "batch", "heads", None, None),
+                             ("layers", "batch", "heads", None),
+                             ("layers", "batch", "heads"))
+        slstm = S.SLSTMState(*(("layers", "batch", "heads", None),) * 4)
+    return DecodeCache(kv, mamba, mlstm, slstm, shared, ())
+
+
+def batch_logical_axes(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    """Logical axes for the input batch dict of a given step kind."""
+    tok = ("batch", None)
+    if kind == "train":
+        ax = {"tokens": tok, "labels": tok}
+    elif kind == "prefill":
+        ax = {"tokens": tok}
+    else:
+        return {"tokens": tok, "cache": cache_logical_axes(cfg)}
+    if cfg.frontend:
+        ax["frontend_embed"] = ("batch", None, None)
+    return ax
+
+
+# ===========================================================================
+# Input specs (ShapeDtypeStruct stand-ins for the dry-run)
+# ===========================================================================
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, Sq = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = dtype_of(cfg.dtype)
+    F = cfg.frontend_len if cfg.frontend else 0
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, Sq - F), i32),
+            "labels": jax.ShapeDtypeStruct((B, Sq - F), i32),
+        }
+        if F:
+            specs["frontend_embed"] = jax.ShapeDtypeStruct(
+                (B, F, cfg.d_model), dt)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, Sq - F), i32)}
+        if F:
+            specs["frontend_embed"] = jax.ShapeDtypeStruct(
+                (B, F, cfg.d_model), dt)
+        return specs
+    # decode: one new token against a cache of seq_len
+    cache = jax.eval_shape(lambda: init_decode_cache(cfg, B, Sq))
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "cache": cache,
+    }

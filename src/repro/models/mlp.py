@@ -1,0 +1,166 @@
+"""Dense SwiGLU MLP and Mixture-of-Experts (capacity-based dispatch).
+
+The MoE expert GEMMs are the framework's "multi-mode FC engine": the same
+batched-GEMM path PipeCNN uses for FC layers (batching to reuse weights),
+with the expert axis sharded over the TP axis (expert parallelism).
+
+Dispatch is GShard-style capacity-bounded scatter/gather: tokens are placed
+into an (E, C, D) buffer (scatter-add), expert GEMMs run as one batched
+matmul, and results are combined back with the routing weights. Compute is
+proportional to *active* parameters (top_k), not total experts — keeping the
+HLO-FLOPs / MODEL-FLOPs ratio honest for the roofline analysis.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models.layers import dense_init, swiglu
+from repro.parallel.sharding import shard
+
+CAPACITY_FACTOR = 1.25
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU
+# ---------------------------------------------------------------------------
+
+def init_mlp_params(key, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, (cfg.d_model, 2 * cfg.d_ff), dtype),
+        "wdown": dense_init(k2, (cfg.d_ff, cfg.d_model), dtype),
+    }
+
+
+def mlp_forward(p, x) -> jax.Array:
+    h = swiglu(x @ p["wi"])
+    h = shard(h, "batch", "seq", "ffn")
+    return h @ p["wdown"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def init_moe_params(key, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (cfg.d_model, cfg.n_experts),
+                             jnp.float32),
+        "moe_wi": dense_init(ks[1], (cfg.n_experts, cfg.d_model,
+                                     2 * cfg.d_ff), dtype),
+        "moe_wdown": dense_init(ks[2], (cfg.n_experts, cfg.d_ff,
+                                        cfg.d_model), dtype),
+    }
+    if cfg.moe_dense_residual:       # Arctic: parallel dense path
+        kk = jax.random.split(ks[3])
+        p["wi"] = dense_init(kk[0], (cfg.d_model, 2 * cfg.d_ff), dtype)
+        p["wdown"] = dense_init(kk[1], (cfg.d_ff, cfg.d_model), dtype)
+    return p
+
+
+def route_topk(logits: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-k routing. Returns (weights (T,k) fp32 summing to 1, idx (T,k))."""
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(gates, k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return w, idx
+
+
+def expert_capacity(n_tokens: int, cfg: ModelConfig,
+                    factor: float = CAPACITY_FACTOR) -> int:
+    c = int(n_tokens * cfg.top_k * factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)                    # round up to 8
+
+
+def moe_dispatch_indices(idx: jax.Array, E: int):
+    """Position of each (token, k) routing choice within its expert queue.
+
+    idx: (T, K) expert ids. Returns (e_flat (TK,), pos (TK,)) where pos is
+    the arrival order among all choices routed to the same expert
+    (tokens beyond capacity get pos >= C and are dropped by the scatter's
+    out-of-bounds mode).
+
+    Implemented as a TWO-LEVEL blocked running count. A flat (TK, E)
+    one-hot cumsum (or a global sort) along the *sharded* token axis is
+    lowered by the SPMD partitioner to a prefix reduce-window / multi-round
+    sort that HLO-costs QUADRATIC in local tokens — it was 15x the whole
+    model's FLOPs at train_4k scale (EXPERIMENTS.md §Perf, MoE iteration).
+    Blocking keeps the big cumsum on a local (unsharded) axis; only the
+    tiny (n_blocks, E) block-offset cumsum crosses shards.
+    """
+    e_flat = idx.reshape(-1)                         # (TK,)
+    TK = e_flat.shape[0]
+    blk = min(1024, TK)
+    pad = (-TK) % blk
+    # padded entries get expert id E: one_hot maps them to all-zeros, so
+    # they consume no queue slots
+    ep = jnp.pad(e_flat, (0, pad), constant_values=E)
+    nb = ep.shape[0] // blk
+    oh = jax.nn.one_hot(ep.reshape(nb, blk), E, dtype=jnp.int32)
+    local = jnp.cumsum(oh, axis=1) - oh              # exclusive, local axis
+    block_tot = jnp.sum(oh, axis=1)                  # (NB, E)
+    block_off = jnp.cumsum(block_tot, axis=0) - block_tot   # tiny prefix
+    pos_all = (local + block_off[:, None, :]).reshape(nb * blk, E)
+    pos = jnp.take_along_axis(
+        pos_all, jnp.clip(ep, 0, E - 1)[:, None], axis=1)[:, 0]
+    return e_flat, pos[:TK]
+
+
+def moe_forward(p, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux load-balance loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = cfg.moe_groups if T % max(cfg.moe_groups, 1) == 0 else 1
+    Tl = T // G
+    C = expert_capacity(Tl, cfg)
+    xt = x.reshape(T, D)
+    logits = xt.astype(jnp.float32) @ p["router"]    # (T, E) fp32
+    w, idx = route_topk(logits, K)                   # (T,K)
+
+    # group-local dispatch: the G dim aligns with the data sharding, so the
+    # scatter/gather below never crosses data shards (capacity per group)
+    xg = shard(xt.reshape(G, Tl, D), "batch", None, None)
+    idx_g = idx.reshape(G, Tl, K)
+    e_flat, pos = jax.vmap(lambda i: moe_dispatch_indices(i, E))(idx_g)
+    tok = jnp.broadcast_to(jnp.repeat(jnp.arange(Tl), K), (G, Tl * K))
+
+    def scatter_one(xg_, e_, p_, t_):
+        buf = jnp.zeros((E, C, D), x.dtype)
+        return buf.at[e_, p_].add(xg_[t_], mode="drop")
+    buf = jax.vmap(scatter_one)(xg, e_flat, pos, tok)   # (G, E, C, D)
+    buf = shard(buf, "batch", "experts", None, None)
+
+    # expert GEMMs — batched matmul, (G x E) tiled over (data x model)
+    h = jnp.einsum("gecd,edf->gecf", buf, p["moe_wi"])
+    h = shard(h, "batch", "experts", None, None)
+    h = swiglu(h)
+    o = jnp.einsum("gecf,efd->gecd", h, p["moe_wdown"])
+    o = shard(o, "batch", "experts", None, None)
+
+    # combine: gather each choice's expert output, weight, sum over K
+    gathered = jax.vmap(
+        lambda o_, e_, p_: o_[e_, jnp.minimum(p_, C - 1)])(
+        o, e_flat, pos)                              # (G, TlK, D)
+    keep = (pos < C).astype(jnp.float32)[..., None]
+    wk = w.reshape(G, Tl * K)[..., None] * keep
+    out = jax.vmap(
+        lambda g_, t_, v_: jnp.zeros((Tl, D), jnp.float32).at[t_].add(v_))(
+        tok, tok, gathered.astype(jnp.float32) * wk)
+    out = out.reshape(B, S, D).astype(x.dtype)
+
+    # Switch-style load-balance aux loss
+    gates = jax.nn.softmax(logits, axis=-1)
+    density = jnp.mean(
+        jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    mean_gate = jnp.mean(gates, axis=0)
+    aux = E * jnp.sum(density * mean_gate)
+
+    if cfg.moe_dense_residual:
+        out = out + mlp_forward(p, x)
+    return out, aux

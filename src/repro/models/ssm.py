@@ -1,0 +1,377 @@
+"""Sequence state-space blocks: Mamba2 (chunked SSD) and xLSTM (m/sLSTM).
+
+The Mamba2 chunked scan is the PipeCNN pipeline idea applied to recurrence:
+the sequence is streamed in chunks, the inter-chunk state (the "channel"
+payload) stays on-chip, and within-chunk work is a dense GEMM for the MXU —
+never materializing the (S x S) interaction.
+
+All recurrences run in fp32 regardless of activation dtype.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.parallel.sharding import shard
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_d_inner
+    nh = cfg.ssm_heads
+    P = cfg.ssm_headdim
+    N = cfg.ssm_state
+    assert nh * P == d_inner
+    return d_inner, nh, P, N
+
+
+def init_mamba_params(key, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    d_inner, nh, P, N = mamba_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_inner + 2 * N + nh), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, conv_dim), dtype,
+                             scale=np.sqrt(cfg.ssm_conv_width)),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, float(nh), nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), np.log(np.expm1(0.01)), jnp.float32),
+        "ssm_norm": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], (d_inner, d), dtype),
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: jax.Array = None):
+    """Depthwise causal conv along seq. x (B,S,C); w (W,C); state (B,W-1,C).
+
+    Returns (y, new_state). With ``state`` given, x may be S=1 (decode).
+    """
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)           # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):, :]
+    return jax.nn.silu(y + b), new_state
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array                                   # (B, nh, P, N) fp32
+    conv: jax.Array                                  # (B, W-1, conv_dim)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    d_inner, nh, P, N = mamba_dims(cfg)
+    return MambaState(
+        jnp.zeros((batch, nh, P, N), jnp.float32),
+        jnp.zeros((batch, cfg.ssm_conv_width - 1, d_inner + 2 * N), dtype))
+
+
+def _split_in_proj(h, cfg: ModelConfig):
+    d_inner, nh, P, N = mamba_dims(cfg)
+    z, xbc, dt = jnp.split(h, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def mamba_forward(p, x, cfg: ModelConfig,
+                  state: MambaState = None) -> Tuple[jax.Array, MambaState]:
+    """Full-sequence chunked SSD. x (B,S,D) -> (y (B,S,D), final state).
+
+    Arbitrary S: a remainder chunk (S % ssm_chunk) is processed as a second
+    pass carrying the state — exact, no padding corruption.
+    """
+    Bsz, S, _ = x.shape
+    Q = min(cfg.ssm_chunk, S)
+    if S % Q:
+        s0 = (S // Q) * Q
+        y0, state = mamba_forward(p, x[:, :s0], cfg, state)
+        y1, state = mamba_forward(p, x[:, s0:], cfg, state)
+        return jnp.concatenate([y0, y1], axis=1), state
+    d_inner, nh, P, N = mamba_dims(cfg)
+    NC = S // Q
+
+    h = x @ p["in_proj"]
+    z, xbc, dt_pre = _split_in_proj(h, cfg)
+    if state is None:
+        state = init_mamba_state(cfg, Bsz, x.dtype)
+    xbc, conv_state = causal_conv1d(xbc, p["conv_w"], p["conv_b"], state.conv)
+    xs, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                         # (nh,)
+    xh = xs.reshape(Bsz, S, nh, P).astype(jnp.float32)
+    Bm = Bmat.astype(jnp.float32)                                    # (B,S,N)
+    Cm = Cmat.astype(jnp.float32)
+
+    # --- chunked SSD scan: carry the (B, nh, P, N) state across chunks ---
+    xc = xh.reshape(Bsz, NC, Q, nh, P).transpose(1, 0, 2, 3, 4)
+    Bc = Bm.reshape(Bsz, NC, Q, N).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(Bsz, NC, Q, N).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(Bsz, NC, Q, nh).transpose(1, 0, 2, 3)
+
+    def chunk_body(carry, inp):
+        st = carry                                   # (B, nh, P, N)
+        xq, bq, cq, dq = inp                         # (B,Q,nh,P/N/nh)
+        dta = dq * A                                 # (B,Q,nh) log-decay
+        s_in = jnp.cumsum(dta, axis=1)               # inclusive cumsum
+        # inter-chunk: y_i += C_i . (state * exp(s_i))
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", cq, st, jnp.exp(s_in))
+        # intra-chunk: decay(i,j) = exp(s_i - s_j), i >= j
+        dec = jnp.exp(s_in[:, :, None, :] - s_in[:, None, :, :])  # (B,Q,Q,h)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        dec = jnp.where(mask[None, :, :, None], dec, 0.0)
+        cb = jnp.einsum("bqn,bjn->bqj", cq, bq)                    # (B,Q,Q)
+        w_ij = cb[:, :, :, None] * dec * dq[:, None, :, :]         # (B,Q,Q,h)
+        y_intra = jnp.einsum("bqjh,bjhp->bqhp", w_ij, xq)
+        # state update: st' = st*exp(s_Q) + sum_j exp(s_Q - s_j) dt_j x_j B_j^T
+        tail = jnp.exp(s_in[:, -1:, :] - s_in)                     # (B,Q,h)
+        st_new = st * jnp.exp(s_in[:, -1, :])[:, :, None, None] + jnp.einsum(
+            "bqh,bqhp,bqn->bhpn", tail * dq, xq, bq)
+        return st_new, y_inter + y_intra
+
+    from repro.models.layers import scan_or_unroll
+    st_final, yc = scan_or_unroll(chunk_body, state.ssm, (xc, Bc, Cc, dtc),
+                                  use_scan=cfg.scan_layers)
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, nh, P)
+    y = y + xh * p["D"][None, None, :, None]         # skip connection
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], MambaState(st_final, conv_state)
+
+
+def mamba_decode(p, x, cfg: ModelConfig,
+                 state: MambaState) -> Tuple[jax.Array, MambaState]:
+    """Single-token recurrent step. x (B,1,D)."""
+    Bsz = x.shape[0]
+    d_inner, nh, P, N = mamba_dims(cfg)
+    h = x @ p["in_proj"]
+    z, xbc, dt_pre = _split_in_proj(h, cfg)
+    xbc, conv_state = causal_conv1d(xbc, p["conv_w"], p["conv_b"], state.conv)
+    xs, Bm, Cm = jnp.split(xbc[:, 0], [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_pre[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(Bsz, nh, P).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                          # (B,nh)
+    st = state.ssm * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bm.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), st)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], MambaState(st, conv_state)
+
+
+# ===========================================================================
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory w/ recurrence)
+# ===========================================================================
+
+def xlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    nh = cfg.n_heads
+    d_inner = cfg.d_model                             # no expansion
+    P = d_inner // nh
+    return d_inner, nh, P
+
+
+def init_mlstm_params(key, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    d_inner, nh, P = xlstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * d_inner), dtype),
+        "wqkv": dense_init(ks[1], (d_inner, 3 * d_inner), dtype),
+        "w_gates": dense_init(ks[2], (d_inner, 2 * nh), dtype),
+        "gate_b": jnp.concatenate([jnp.zeros((nh,)),                 # i
+                                   jnp.linspace(3.0, 6.0, nh)]       # f
+                                  ).astype(jnp.float32),
+        "mem_norm": jnp.ones((d_inner,), dtype),
+        "wdown": dense_init(ks[3], (d_inner, d), dtype),
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array                                     # (B, nh, P, P)
+    n: jax.Array                                     # (B, nh, P)
+    m: jax.Array                                     # (B, nh)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    _, nh, P = xlstm_dims(cfg)
+    return MLSTMState(jnp.zeros((batch, nh, P, P), jnp.float32),
+                      jnp.zeros((batch, nh, P), jnp.float32),
+                      jnp.full((batch, nh), -1e30, jnp.float32))
+
+
+def _mlstm_step(state: MLSTMState, q, k, v, i_pre, f_pre):
+    """Stabilized exponential-gating mLSTM cell. All (B,nh,...) fp32."""
+    log_f = -jax.nn.softplus(-f_pre)                 # log sigmoid(f)
+    m_new = jnp.maximum(log_f + state.m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + state.m - m_new)
+    C = state.C * f_g[..., None, None] + i_g[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n = state.n * f_g[..., None] + i_g[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, q)),
+                        jnp.exp(-m_new))
+    y = jnp.einsum("bhpq,bhq->bhp", C, q) / denom[..., None]
+    return MLSTMState(C, n, m_new), y
+
+
+def mlstm_forward(p, x, cfg: ModelConfig,
+                  state: MLSTMState = None) -> Tuple[jax.Array, MLSTMState]:
+    """Chunkwise-parallel stabilized mLSTM (TPU adaptation, see DESIGN.md).
+
+    The original xLSTM formulation is a per-step recurrence; like Mamba2's
+    SSD we stream the sequence in chunks: intra-chunk interactions are a
+    masked GEMM for the MXU, the (P x P) matrix memory crosses chunk
+    boundaries as the carried state. Matches `_mlstm_step` exactly (tested).
+    """
+    Bsz, S, _ = x.shape
+    d_inner, nh, P = xlstm_dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    if S % Q:                        # remainder chunk, state carried exactly
+        s0 = (S // Q) * Q
+        y0, state = mlstm_forward(p, x[:, :s0], cfg, state)
+        y1, state = mlstm_forward(p, x[:, s0:], cfg, state)
+        return jnp.concatenate([y0, y1], axis=1), state
+    NC = S // Q
+    up = x @ p["w_up"]
+    xin, z = jnp.split(up, 2, axis=-1)
+    qkv = (xin @ p["wqkv"]).reshape(Bsz, S, 3, nh, P).astype(jnp.float32)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1] / np.sqrt(P), qkv[:, :, 2]
+    gates = (xin @ p["w_gates"]).astype(jnp.float32) + p["gate_b"]
+    i_pre, f_pre = jnp.split(gates.reshape(Bsz, S, 2, nh), 2, axis=2)
+    i_pre, f_pre = i_pre[:, :, 0], f_pre[:, :, 0]          # (B,S,nh)
+
+    if state is None:
+        state = init_mlstm_state(cfg, Bsz)
+
+    # chunk views: (NC, B, Q, ...)
+    ch = lambda a: a.reshape(Bsz, NC, Q, *a.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, ic, fc = map(ch, (q, k, v, i_pre, f_pre))
+
+    def chunk_body(st, inp):
+        qj, kj, vj, ij, fj = inp                           # (B,Q,nh,*)
+        log_f = -jax.nn.softplus(-fj)                      # (B,Q,nh)
+        b = jnp.cumsum(log_f, axis=1)                      # inclusive
+        btot = b[:, -1]                                    # (B,nh)
+        # intra-chunk log-weights D_ij = b_i - b_j + log_f_j? no: standard
+        # D_ij = (b_i - b_j) + i_j for j <= i  (decay from j+1..i, input i_j)
+        D = b[:, :, None, :] - b[:, None, :, :] + ij[:, None, :, :]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        D = jnp.where(mask[None, :, :, None], D, -jnp.inf)
+        m_intra = jnp.max(D, axis=2)                       # (B,Q,nh)
+        m_inter = st.m[:, None, :] + b                     # (B,Q,nh)
+        m_i = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+        Sij = jnp.einsum("bihp,bjhp->bijh", qj, kj) * jnp.exp(
+            D - m_i[:, :, None, :])
+        inter_scale = jnp.exp(m_inter - m_i)               # (B,Q,nh)
+        num = jnp.einsum("bijh,bjhp->bihp", Sij, vj) + \
+            inter_scale[..., None] * jnp.einsum("bihp,bhpq->bihq", qj, st.C)
+        den = jnp.sum(Sij, axis=2) + inter_scale * jnp.einsum(
+            "bihp,bhp->bih", qj, st.n)
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # state update across the chunk boundary
+        g = btot[:, None, :] - b + ij                      # (B,Q,nh)
+        m_new = jnp.maximum(st.m + btot, jnp.max(g, axis=1))
+        w_st = jnp.exp(g - m_new[:, None, :])
+        C = st.C * jnp.exp(st.m + btot - m_new)[..., None, None] + \
+            jnp.einsum("bjh,bjhp,bjhq->bhpq", w_st, kj, vj)
+        n = st.n * jnp.exp(st.m + btot - m_new)[..., None] + \
+            jnp.einsum("bjh,bjhp->bhp", w_st, kj)
+        return MLSTMState(C, n, m_new), y
+
+    from repro.models.layers import scan_or_unroll
+    state, ys = scan_or_unroll(chunk_body, state, (qc, kc, vc, ic, fc),
+                               use_scan=cfg.scan_layers)
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = rms_norm(y, p["mem_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["wdown"], state
+
+
+def mlstm_decode(p, x, cfg, state: MLSTMState):
+    y, st = mlstm_forward(p, x, cfg, state)
+    return y, st
+
+
+def init_slstm_params(key, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    d_inner, nh, P = xlstm_dims(cfg)
+    pf = max(8, int(d * 4 / 3) // 8 * 8)             # xLSTM's 4/3 proj factor
+    ks = jax.random.split(key, 4)
+    return {
+        "w_gates": dense_init(ks[0], (d, 4 * d_inner), dtype),
+        "r_gates": dense_init(ks[1], (nh, P, 4 * P), jnp.float32),
+        "gate_b": jnp.zeros((4 * d_inner,), jnp.float32),
+        "mem_norm": jnp.ones((d_inner,), dtype),
+        "w_up": dense_init(ks[2], (d_inner, 2 * pf), dtype),
+        "wdown": dense_init(ks[3], (pf, d), dtype),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array                                     # (B, nh, P)
+    n: jax.Array
+    m: jax.Array
+    h: jax.Array
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    _, nh, P = xlstm_dims(cfg)
+    z = jnp.zeros((batch, nh, P), jnp.float32)
+    return SLSTMState(z, z, jnp.full((batch, nh, P), -1e30, jnp.float32), z)
+
+
+def _slstm_step(p, state: SLSTMState, gx):
+    """gx: (B, nh, 4P) input-gate preactivations for one step (fp32)."""
+    rec = jnp.einsum("bhp,hpq->bhq", state.h, p["r_gates"])
+    pre = gx + rec                                   # (B, nh, 4P)
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    log_f = -jax.nn.softplus(-ft)
+    m_new = jnp.maximum(log_f + state.m, it)
+    i_g = jnp.exp(it - m_new)
+    f_g = jnp.exp(log_f + state.m - m_new)
+    c = f_g * state.c + i_g * jnp.tanh(zt)
+    n = f_g * state.n + i_g
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c, n, m_new, h)
+
+
+def slstm_forward(p, x, cfg: ModelConfig,
+                  state: SLSTMState = None) -> Tuple[jax.Array, SLSTMState]:
+    from repro.models.layers import swiglu
+    Bsz, S, _ = x.shape
+    d_inner, nh, P = xlstm_dims(cfg)
+    gx = (x @ p["w_gates"]).astype(jnp.float32) + p["gate_b"]
+    # (B,S,4*d_inner) -> (B,S,nh,4P): per-head gate grouping
+    gx = gx.reshape(Bsz, S, 4, nh, P).transpose(0, 1, 3, 2, 4)
+    gx = gx.reshape(Bsz, S, nh, 4 * P)
+    if state is None:
+        state = init_slstm_state(cfg, Bsz)
+
+    def body(st, g):
+        st = _slstm_step(p, st, g)
+        return st, st.h
+
+    state, hs = jax.lax.scan(body, state, gx.transpose(1, 0, 2, 3))
+    h = hs.transpose(1, 0, 2, 3).reshape(Bsz, S, d_inner).astype(x.dtype)
+    h = rms_norm(h, p["mem_norm"], cfg.norm_eps)
+    return swiglu(h @ p["w_up"]) @ p["wdown"], state
+
+
+def slstm_decode(p, x, cfg, state: SLSTMState):
+    y, st = slstm_forward(p, x, cfg, state)
+    return y, st

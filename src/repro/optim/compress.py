@@ -1,0 +1,82 @@
+"""int8 error-feedback gradient compression for cross-pod all-reduce.
+
+At 1000+-node scale the pod-level gradient all-reduce crosses DCN (slow)
+links; 4x compression there is a standard distributed-optimization trick.
+Scheme: per-tensor-block symmetric int8 quantization with an error-feedback
+buffer (residual added back next step) — provably convergent for SGD-type
+methods and empirically fine for AdamW at beta2 < 1.
+
+Works under jit/pjit: quantize -> (int8 payload, fp32 scale) -> the psum
+happens on the DEQUANTIZED values (XLA collectives don't accept int8 reduce
+on all backends) but the *payload crossing the pod axis* is what the
+compressed size models; `compressed_bytes` feeds the roofline's collective
+term. Exactness is traded per `BLOCK`-granular scales.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 2048
+
+
+class CompressionState(NamedTuple):
+    error: Any            # pytree like grads: error-feedback residual
+
+
+def init_compression(grads_like) -> CompressionState:
+    return CompressionState(
+        jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def _quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def compress_grads(grads, state: CompressionState
+                   ) -> Tuple[Any, CompressionState]:
+    """Returns (quantize-dequantized grads, new error state).
+
+    Apply BEFORE the optimizer; under pjit the dequantized values flow into
+    the (reduce-scattered) gradient like normal — the compression error is
+    carried in `state.error` and re-injected next step.
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = _quantize(gf)
+        deq = _dequantize(q, s, g.shape)
+        return deq.astype(g.dtype), gf - deq
+
+    pairs = jax.tree.map(one, grads, state.error)
+    newg = jax.tree.map(lambda t: t[0], pairs,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    newe = jax.tree.map(lambda t: t[1], pairs,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    return newg, CompressionState(newe)
+
+
+def compressed_bytes(grads) -> int:
+    """Payload size if the pod-crossing all-reduce moved int8+scales."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        n = g.size
+        blocks = -(-n // BLOCK)
+        total += n + 4 * blocks                       # int8 + fp32 scale
+    return total

@@ -1,0 +1,81 @@
+"""GPipe-style pipeline parallelism over a mesh axis (shard_map + ppermute).
+
+For the multi-pod mesh the "pod" axis can carry pipeline stages instead of
+pure DP: stage s holds layers [s*L/S, (s+1)*L/S); microbatches stream
+through, activations crossing stages via collective_permute (one ICI/DCN
+hop). This is the PipeCNN cascade at cluster scale — each pod is a pipeline
+stage, the inter-pod link is the channel.
+
+The schedule below is the classic fill-drain GPipe loop with M microbatches
+over S stages (bubble fraction (S-1)/(M+S-1)); it runs forward-only
+(serving / evaluation) or in a gradient context via jax.grad over the whole
+scheduled computation.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(stage_fn: Callable, params_stacked, x: jax.Array,
+                     mesh: Mesh, axis: str = "pod",
+                     n_microbatches: int = 4) -> jax.Array:
+    """Run x through S pipeline stages laid along ``axis``.
+
+    stage_fn(stage_params, h) -> h   applies one stage's layers.
+    params_stacked: pytree with leading dim S (stage-major), sharded so
+    stage s's slice lives on pod s.  x: (B, ...) batch-shardable into
+    n_microbatches along dim 0.
+    """
+    S = mesh.shape[axis]
+    B = x.shape[0]
+    assert B % n_microbatches == 0
+    mb = B // n_microbatches
+    micro = x.reshape(n_microbatches, mb, *x.shape[1:])
+
+    def body(params_local, micro_local):
+        # params_local: this stage's params (leading dim 1) on this shard
+        stage_params = jax.tree.map(lambda a: a[0], params_local)
+        idx = jax.lax.axis_index(axis)
+        n_ticks = n_microbatches + S - 1
+        fwd = [(i, (i + 1) % S) for i in range(S)]     # stage i -> i+1
+
+        def tick(t, carry):
+            outputs, inflight = carry
+            # which microbatch enters stage 0 at tick t?
+            mb_idx = jnp.clip(t, 0, n_microbatches - 1)
+            incoming = jnp.where(
+                (idx == 0) & (t < n_microbatches),
+                jax.lax.dynamic_index_in_dim(micro_local, mb_idx, 0, False),
+                inflight)
+            h = stage_fn(stage_params, incoming)
+            # last stage: record finished microbatch (entered at t-S+1)
+            done_idx = jnp.clip(t - S + 1, 0, n_microbatches - 1)
+            outputs = jnp.where(
+                (idx == S - 1) & (t >= S - 1),
+                jax.lax.dynamic_update_index_in_dim(
+                    outputs, h, done_idx, 0),
+                outputs)
+            inflight = jax.lax.ppermute(h, axis, fwd)
+            return outputs, inflight
+
+        outputs = jnp.zeros_like(micro_local)
+        inflight = jnp.zeros_like(micro_local[0])
+        outputs, _ = jax.lax.fori_loop(0, n_ticks, tick,
+                                       (outputs, inflight))
+        # broadcast final outputs from the last stage to all pods
+        # (ppermute is a permutation — use a masked psum to broadcast)
+        outputs = jax.lax.psum(
+            jnp.where(idx == S - 1, outputs, jnp.zeros_like(outputs)), axis)
+        return outputs
+
+    out = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P()),         # params stage-sharded; x replicated
+        out_specs=P(),
+        check_rep=False)(params_stacked, micro)
+    return out.reshape(B, *x.shape[1:])

@@ -1,0 +1,132 @@
+"""Resilient training loop: checkpoint/restart, failure recovery, straggler
+mitigation hooks, optional gradient compression.
+
+Designed for 1000+-node operation:
+  * async checkpoint every ``ckpt_every`` steps (never blocks the step);
+  * on ANY step failure (device loss / preemption — simulated in tests via
+    an injected fault), the loop restores the latest committed checkpoint,
+    rebuilds the data stream at the restored step, and continues;
+  * per-step wall-clock watchdog: steps slower than ``straggler_factor`` x
+    the running median are logged and counted — on real fleets this signal
+    feeds the scheduler's hot-spare swap (we implement detection + the
+    resync path, the swap itself needs a cluster manager);
+  * elastic restart: `run` accepts any mesh whose sharding can consume the
+    checkpoint (see ckpt.load_checkpoint's resharding path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager, latest_step, \
+    load_checkpoint
+from repro.core.config import ModelConfig
+from repro.data.pipeline import DataConfig, token_batches
+from repro.optim.adamw import AdamWConfig
+from repro.optim.compress import CompressionState, compress_grads, \
+    init_compression
+from repro.train.steps import TrainState, init_train_state, train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 2
+    max_restarts: int = 3
+    straggler_factor: float = 3.0
+    log_every: int = 10
+    compress_grads: bool = False
+
+
+class ResilientLoop:
+    def __init__(self, cfg: ModelConfig, loop_cfg: LoopConfig,
+                 data_cfg: DataConfig, ocfg: Optional[AdamWConfig] = None,
+                 fault_hook: Optional[Callable[[int], None]] = None):
+        self.cfg = cfg
+        self.loop_cfg = loop_cfg
+        self.data_cfg = data_cfg
+        self.ocfg = ocfg or AdamWConfig(state_dtype=cfg.opt_state_dtype)
+        self.fault_hook = fault_hook or (lambda step: None)
+        self.manager = CheckpointManager(loop_cfg.ckpt_dir, loop_cfg.keep)
+        self.metrics_log: list = []
+        self.straggler_events: list = []
+        self.restarts = 0
+
+        def step_fn(state, batch):
+            if loop_cfg.compress_grads:
+                return self._compressed_step(state, batch)
+            return train_step(state, batch, cfg, self.ocfg)
+        self._jit_step = jax.jit(step_fn, donate_argnums=(0,))
+
+    def _compressed_step(self, state, batch):
+        from repro.models import lm
+        loss, grads = jax.value_and_grad(
+            lambda p: lm.loss_fn(p, batch, self.cfg))(state.params)
+        grads, self._comp_state = compress_grads(grads, self._comp_state)
+        from repro.optim.adamw import adamw_update
+        newp, newo, metrics = adamw_update(grads, state.opt, state.params,
+                                           self.ocfg)
+        return TrainState(newp, newo), dict(metrics, loss=loss)
+
+    def _init_state(self) -> tuple:
+        key = jax.random.key(self.data_cfg.seed)
+        state = init_train_state(key, self.cfg, self.ocfg)
+        if self.loop_cfg.compress_grads:
+            self._comp_state = init_compression(state.params)
+        start = 0
+        if latest_step(self.loop_cfg.ckpt_dir) is not None:
+            state, start = load_checkpoint(self.loop_cfg.ckpt_dir, state)
+            print(f"[loop] restored checkpoint at step {start}")
+        return state, start
+
+    def run(self) -> Dict[str, Any]:
+        state, step = self._init_state()
+        data = token_batches(self.data_cfg, self.cfg, start_step=step)
+        durations: list = []
+        while step < self.loop_cfg.total_steps:
+            try:
+                batch = next(data)
+                self.fault_hook(step)               # test injection point
+                t0 = time.time()
+                state, metrics = self._jit_step(
+                    state, {k: jax.numpy.asarray(v)
+                            for k, v in batch.items()})
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                durations.append(dt)
+                med = float(np.median(durations[-50:]))
+                if (len(durations) > 5
+                        and dt > self.loop_cfg.straggler_factor * med):
+                    self.straggler_events.append((step, dt, med))
+                    print(f"[loop] straggler at step {step}: "
+                          f"{dt:.2f}s vs median {med:.2f}s")
+                step += 1
+                self.metrics_log.append({"step": step, "loss": loss})
+                if step % self.loop_cfg.log_every == 0:
+                    print(f"[loop] step {step} loss {loss:.4f} ({dt:.2f}s)")
+                if step % self.loop_cfg.ckpt_every == 0:
+                    self.manager.save_async(step, state)
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:
+                self.restarts += 1
+                print(f"[loop] step {step} FAILED ({type(e).__name__}: {e});"
+                      f" restart {self.restarts}/{self.loop_cfg.max_restarts}")
+                if self.restarts > self.loop_cfg.max_restarts:
+                    raise
+                self.manager.wait()
+                state, step = self._init_state()
+                data = token_batches(self.data_cfg, self.cfg,
+                                     start_step=step)
+        self.manager.wait()
+        self.manager.save_async(step, state)
+        self.manager.wait()
+        return {"final_step": step, "restarts": self.restarts,
+                "stragglers": len(self.straggler_events),
+                "metrics": self.metrics_log}

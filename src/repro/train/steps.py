@@ -1,0 +1,55 @@
+"""Jittable step functions: train_step and serve_step (prefill / decode)."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models import lm
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_update, \
+    init_adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(key, cfg: ModelConfig,
+                     ocfg: AdamWConfig = None) -> TrainState:
+    ocfg = ocfg or AdamWConfig(state_dtype=cfg.opt_state_dtype)
+    params = lm.init_params(key, cfg)
+    return TrainState(params, init_adamw(params, ocfg))
+
+
+def train_step(state: TrainState, batch: Dict[str, jax.Array],
+               cfg: ModelConfig, ocfg: AdamWConfig = None
+               ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    ocfg = ocfg or AdamWConfig(state_dtype=cfg.opt_state_dtype)
+    loss, grads = jax.value_and_grad(
+        lambda p: lm.loss_fn(p, batch, cfg))(state.params)
+    new_params, new_opt, metrics = adamw_update(
+        grads, state.opt, state.params, ocfg)
+    metrics = dict(metrics, loss=loss)
+    return TrainState(new_params, new_opt), metrics
+
+
+def serve_prefill(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+                  s_max: int):
+    """Prefill a prompt batch -> (next-token ids, logits, cache)."""
+    logits, cache = lm.prefill(params, batch["tokens"], cfg, s_max,
+                               batch.get("frontend_embed"))
+    pad_mask = (jnp.arange(logits.shape[-1]) >= cfg.vocab) * (-1e30)
+    next_ids = jnp.argmax(logits + pad_mask, axis=-1)
+    return next_ids, logits, cache
+
+
+def serve_decode(params, tokens: jax.Array, cache: lm.DecodeCache,
+                 cfg: ModelConfig):
+    """One decode step -> (next-token ids, logits, new cache)."""
+    logits, cache = lm.decode_step(params, tokens, cache, cfg)
+    pad_mask = (jnp.arange(logits.shape[-1]) >= cfg.vocab) * (-1e30)
+    next_ids = jnp.argmax(logits + pad_mask, axis=-1)
+    return next_ids, logits, cache

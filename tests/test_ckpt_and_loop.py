@@ -1,0 +1,141 @@
+"""Fault tolerance: checkpoint roundtrip, crash recovery, elastic restore,
+straggler detection, gradient-compression training."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import (CheckpointManager, latest_step,
+                                   load_checkpoint, save_checkpoint)
+from repro.configs import get_config
+from repro.core.config import ModelConfig
+from repro.data.pipeline import DataConfig, token_batches
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import LoopConfig, ResilientLoop
+from repro.train.steps import init_train_state
+
+KEY = jax.random.key(0)
+
+# test-scale schedule: short warmup so a 20-30 step run actually moves
+OCFG = AdamWConfig(lr=2e-3, warmup_steps=5, total_steps=100)
+
+
+def small_cfg():
+    return get_config("qwen3-8b").smoke()
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = small_cfg()
+    state = init_train_state(KEY, cfg)
+    save_checkpoint(str(tmp_path), 7, state)
+    assert latest_step(str(tmp_path)) == 7
+    restored, step = load_checkpoint(str(tmp_path), state)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_partial_checkpoint_ignored(tmp_path):
+    """A checkpoint without _COMMITTED must be invisible to restore."""
+    cfg = small_cfg()
+    state = init_train_state(KEY, cfg)
+    save_checkpoint(str(tmp_path), 3, state)
+    p = save_checkpoint(str(tmp_path), 9, state)
+    (p / "_COMMITTED").unlink()
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_async_manager_and_gc(tmp_path):
+    cfg = small_cfg()
+    state = init_train_state(KEY, cfg)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, state)
+    mgr.wait()
+    steps = sorted(int(d.name.split("_")[1]) for d in tmp_path.iterdir())
+    assert steps == [3, 4]
+
+
+def test_loop_recovers_from_injected_failure(tmp_path):
+    """Kill the step at a chosen point; the loop must restore + continue,
+    ending at the requested total steps with a finite loss curve."""
+    cfg = small_cfg()
+    fail_at = {15}
+
+    def fault(step):
+        if step in fail_at:
+            fail_at.discard(step)
+            raise RuntimeError("injected device failure")
+
+    loop = ResilientLoop(
+        cfg,
+        LoopConfig(total_steps=25, ckpt_every=5, ckpt_dir=str(tmp_path),
+                   log_every=100),
+        DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4),
+        ocfg=OCFG, fault_hook=fault)
+    out = loop.run()
+    assert out["final_step"] == 25
+    assert out["restarts"] == 1
+    losses = [m["loss"] for m in out["metrics"]]
+    assert all(np.isfinite(l) for l in losses)
+    # recovery resumed from a checkpoint <= failure point
+    assert latest_step(str(tmp_path)) == 25
+
+
+def test_loss_decreases_on_markov_stream(tmp_path):
+    """End-to-end training sanity: structured data => loss must fall."""
+    cfg = small_cfg()
+    loop = ResilientLoop(
+        cfg,
+        LoopConfig(total_steps=30, ckpt_every=100, ckpt_dir=str(tmp_path),
+                   log_every=100),
+        DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8),
+        ocfg=OCFG)
+    out = loop.run()
+    losses = [m["loss"] for m in out["metrics"]]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, \
+        f"no learning: {losses[:3]} -> {losses[-3:]}"
+
+
+def test_compressed_grads_still_learn(tmp_path):
+    cfg = small_cfg()
+    loop = ResilientLoop(
+        cfg,
+        LoopConfig(total_steps=20, ckpt_every=100, ckpt_dir=str(tmp_path),
+                   log_every=100, compress_grads=True),
+        DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8),
+        ocfg=OCFG)
+    out = loop.run()
+    losses = [m["loss"] for m in out["metrics"]]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
+
+
+def test_elastic_restore_across_data_layout(tmp_path):
+    """Checkpoint written under one data layout restores under another
+    (host-count change): the stream restarts at the same step and arrays
+    re-place under the new sharding (single-device here; the sharding
+    plumbing is exercised via the shardings argument)."""
+    cfg = small_cfg()
+    state = init_train_state(KEY, cfg)
+    save_checkpoint(str(tmp_path), 11, state)
+    shardings = jax.tree.map(
+        lambda a: jax.sharding.SingleDeviceSharding(jax.devices()[0]), state)
+    restored, step = load_checkpoint(str(tmp_path), state,
+                                     shardings=shardings)
+    assert step == 11
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_data_stream_determinism():
+    dc = DataConfig(vocab=97, seq_len=16, global_batch=4)
+    a = next(token_batches(dc, start_step=5))
+    b = next(token_batches(dc, start_step=5))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # different hosts see different shards
+    dc2 = DataConfig(vocab=97, seq_len=16, global_batch=4, n_hosts=2,
+                     host_id=1)
+    c = next(token_batches(dc2, start_step=5))
+    assert not np.array_equal(a["tokens"][:2], c["tokens"])

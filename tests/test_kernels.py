@@ -1,0 +1,199 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracles,
+swept across shapes and dtypes as required."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.conv_pipe import conv_pipe
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lrn_pwl import build_pwl_lut, lrn_pwl
+from repro.kernels.matmul_pipe import matmul_pipe
+
+KEY = jax.random.key(42)
+
+
+def tols(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# conv_pipe: fused conv+bias+relu+pool
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,C,K,M,stride,pad,pool,pool_k",
+    [
+        (1, 8, 3, 3, 8, 1, 1, None, 2),
+        (2, 16, 4, 3, 16, 1, 0, "max", 2),
+        (1, 23, 3, 5, 8, 2, 2, "avg", 3),
+        (1, 27, 3, 11, 16, 4, 0, "max", 3),     # AlexNet conv1 geometry
+        (2, 14, 8, 1, 8, 1, 0, None, 2),        # 1x1 conv
+        (1, 12, 6, 3, 12, 3, 1, None, 2),       # stride 3
+    ])
+def test_conv_pipe_matches_oracle(B, H, C, K, M, stride, pad, pool, pool_k,
+                                  dtype):
+    x = jax.random.normal(KEY, (B, H, H, C), jnp.float32).astype(dtype)
+    w = (jax.random.normal(KEY, (K, K, C, M), jnp.float32) * 0.2).astype(dtype)
+    b = jax.random.normal(KEY, (M,), jnp.float32).astype(dtype)
+    got = conv_pipe(x, w, b, stride=stride, pad=pad, pool=pool,
+                    pool_k=pool_k, pool_s=2, c_blk=4, m_blk=8)
+    want = ref.conv_pipe_ref(x, w, b, stride=stride, pad=pad, pool=pool,
+                             pool_k=pool_k, pool_s=2)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tols(dtype))
+
+
+def test_conv_pipe_block_size_invariance():
+    """VEC_SIZE/CU_NUM (c_blk/m_blk) must never change results — only perf."""
+    x = jax.random.normal(KEY, (1, 10, 10, 8), jnp.float32)
+    w = jax.random.normal(KEY, (3, 3, 8, 16), jnp.float32) * 0.2
+    b = jnp.zeros((16,))
+    outs = [conv_pipe(x, w, b, pad=1, c_blk=cb, m_blk=mb)
+            for cb in (2, 4, 8) for mb in (4, 8, 16)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# lrn_pwl: the paper's 0.5% claim
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("C", [8, 32, 96])
+def test_lrn_pwl_accuracy(C):
+    x = jax.random.normal(KEY, (2, 6, 6, C), jnp.float32) * 4
+    exact = ref.lrn_ref(x)
+    approx = lrn_pwl(x, n_sub_bits=2)
+    rel = np.max(np.abs(approx - exact) / (np.abs(exact) + 1e-9))
+    assert rel < 0.005, f"PWL error {rel:.4%} exceeds the paper's 0.5%"
+
+
+def test_lrn_pwl_accuracy_improves_with_n():
+    """Paper: n controls accuracy; higher n => finer segments => lower err."""
+    x = jax.random.normal(KEY, (1, 8, 8, 16), jnp.float32) * 4
+    exact = ref.lrn_ref(x)
+    errs = []
+    for n in (0, 1, 2, 3):
+        approx = lrn_pwl(x, n_sub_bits=n)
+        errs.append(float(np.max(np.abs(approx - exact))))
+    assert errs[0] > errs[2] > errs[3] * 0.999
+
+
+def test_pwl_lut_dense_error_bound():
+    """Exhaustive sweep: the minimax PWL stays under the paper's 0.5%
+    bound across the whole addressable range."""
+    slope, icpt, shift, base = build_pwl_lut(n_sub_bits=2)
+    z = np.linspace(1.0, 2.0 ** 15, 1_000_001).astype(np.float32)
+    bits = z.view(np.int32)
+    addr = np.clip((bits >> shift) - base, 0, len(slope) - 1)
+    got = slope[addr] * z + icpt[addr]
+    rel = np.abs(got - z ** -0.75) / z ** -0.75
+    assert rel.max() < 0.005, f"max rel err {rel.max():.4%}"
+
+
+# ---------------------------------------------------------------------------
+# matmul_pipe: multi-mode FC engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (64, 128, 32, 32, 16, 64),
+    (100, 300, 70, 32, 32, 64),       # non-divisible => padded
+    (1, 256, 1000, 8, 128, 128),      # single-row FC (unbatched classify)
+    (64, 9216, 128, 64, 64, 256),     # AlexNet fc6-like K
+])
+def test_matmul_pipe(M, K, N, bm, bn, bk, dtype):
+    x = (jax.random.normal(KEY, (M, K), jnp.float32) * 0.3).astype(dtype)
+    w = (jax.random.normal(KEY, (K, N), jnp.float32) * 0.05).astype(dtype)
+    b = jax.random.normal(KEY, (N,), jnp.float32).astype(dtype)
+    got = matmul_pipe(x, w, b, relu=True, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_pipe_ref(x, w, b, relu=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               **tols(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,S,D,bq,bk", [
+    (1, 2, 32, 16, 16, 16),
+    (2, 4, 64, 32, 16, 32),
+    (1, 1, 128, 64, 128, 64),
+])
+def test_flash_attention(B, H, S, D, bq, bk, dtype):
+    q = jax.random.normal(KEY, (B, H, S, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.key(1), (B, H, S, D),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.key(2), (B, H, S, D),
+                          jnp.float32).astype(dtype)
+    got = flash_attention(q, k, v, bq=bq, bk=bk)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tols(dtype))
+
+
+def test_flash_attention_is_causal():
+    """Changing future keys must not change past outputs."""
+    q = jax.random.normal(KEY, (1, 2, 32, 16))
+    k = jax.random.normal(jax.random.key(1), (1, 2, 32, 16))
+    v = jax.random.normal(jax.random.key(2), (1, 2, 32, 16))
+    o1 = flash_attention(q, k, v, bq=16, bk=16)
+    k2 = k.at[:, :, 20:].set(99.0)
+    v2 = v.at[:, :, 20:].set(-99.0)
+    o2 = flash_attention(q, k2, v2, bq=16, bk=16)
+    np.testing.assert_allclose(o1[:, :, :20], o2[:, :, :20], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention: fused cache-update + online-softmax decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,HKV,G,D,bs,pos", [
+    (1, 32, 2, 2, 16, 16, 7),
+    (2, 64, 4, 2, 16, 16, 37),
+    (2, 128, 2, 4, 32, 64, 127),     # update at the last slot
+    (1, 64, 1, 8, 16, 64, 0),        # single tile, first slot
+])
+def test_decode_attention_kernel(B, S, HKV, G, D, bs, pos, dtype):
+    from repro.kernels.decode_attention import decode_attention
+    q = jax.random.normal(KEY, (B, HKV, G, D), jnp.float32).astype(dtype)
+    kc = jax.random.normal(jax.random.key(1), (B, S, HKV, D),
+                           jnp.float32).astype(dtype)
+    vc = jax.random.normal(jax.random.key(2), (B, S, HKV, D),
+                           jnp.float32).astype(dtype)
+    nk = jax.random.normal(jax.random.key(3), (B, HKV, D),
+                           jnp.float32).astype(dtype)
+    nv = jax.random.normal(jax.random.key(4), (B, HKV, D),
+                           jnp.float32).astype(dtype)
+    o, ok, ov = decode_attention(q, kc, vc, nk, nv, jnp.asarray(pos), bs=bs)
+    o_r, ok_r, ov_r = ref.decode_attention_ref(q, kc, vc, nk, nv, pos)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_r, np.float32), **tols(dtype))
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(ok_r))
+    np.testing.assert_array_equal(np.asarray(ov), np.asarray(ov_r))
+
+
+def test_decode_attention_ignores_stale_future_slots():
+    """Slots past `pos` (stale garbage from earlier sequences) must not
+    affect the output."""
+    from repro.kernels.decode_attention import decode_attention
+    B, S, HKV, G, D = 1, 64, 2, 2, 16
+    q = jax.random.normal(KEY, (B, HKV, G, D))
+    kc = jax.random.normal(jax.random.key(1), (B, S, HKV, D))
+    vc = jax.random.normal(jax.random.key(2), (B, S, HKV, D))
+    nk = jax.random.normal(jax.random.key(3), (B, HKV, D))
+    nv = jax.random.normal(jax.random.key(4), (B, HKV, D))
+    pos = jnp.asarray(20)
+    o1, _, _ = decode_attention(q, kc, vc, nk, nv, pos, bs=16)
+    kc2 = kc.at[:, 30:].set(77.0)
+    vc2 = vc.at[:, 30:].set(-77.0)
+    o2, _, _ = decode_attention(q, kc2, vc2, nk, nv, pos, bs=16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)

@@ -1,0 +1,108 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.lrn_pwl import build_pwl_lut, lrn_pwl
+from repro.models.layers import cross_entropy, rms_norm
+from repro.models.mlp import expert_capacity, moe_dispatch_indices, route_topk
+from repro.optim.compress import BLOCK, compress_grads, init_compression
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 64), st.integers(2, 8), st.integers(1, 1000))
+def test_routing_weights_sum_to_one(T, k, seed):
+    """Top-k routing weights are a distribution over chosen experts."""
+    E = 8
+    k = min(k, E)
+    logits = jax.random.normal(jax.random.key(seed), (T, E))
+    w, idx = route_topk(logits, k)
+    np.testing.assert_allclose(np.sum(np.asarray(w), -1), 1.0, rtol=1e-5)
+    assert np.all(np.asarray(idx) >= 0) and np.all(np.asarray(idx) < E)
+    # top-k indices are distinct per token
+    for row in np.asarray(idx):
+        assert len(set(row.tolist())) == k
+
+
+@settings(**SETTINGS)
+@given(st.integers(4, 128), st.integers(2, 16), st.integers(1, 4),
+       st.integers(0, 10_000))
+def test_dispatch_positions_are_unique_per_expert(T, E, K, seed):
+    """No two routing choices may claim the same (expert, slot)."""
+    idx = jax.random.randint(jax.random.key(seed), (T, K), 0, E)
+    e_flat, pos = moe_dispatch_indices(idx, E)
+    pairs = list(zip(np.asarray(e_flat).tolist(), np.asarray(pos).tolist()))
+    assert len(set(pairs)) == len(pairs)
+    # positions are exactly 0..count-1 within each expert
+    for e in range(E):
+        ps = sorted(p for ee, p in pairs if ee == e)
+        assert ps == list(range(len(ps)))
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 6), st.integers(1, 500))
+def test_rms_norm_unit_scale(d_exp, seed):
+    """RMSNorm output has unit RMS when gamma=1 (scale invariance)."""
+    d = 2 ** d_exp * 8
+    x = jax.random.normal(jax.random.key(seed), (3, d)) * (seed % 7 + 0.1)
+    y = rms_norm(x, jnp.ones((d,)))
+    rms = np.sqrt(np.mean(np.square(np.asarray(y)), -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-2)
+    # scale invariance: rms_norm(c*x) == rms_norm(x)
+    y2 = rms_norm(x * 3.7, jnp.ones((d,)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 64), st.integers(5, 200), st.integers(0, 1000))
+def test_cross_entropy_bounds(B, V, seed):
+    """CE >= 0; perfect prediction -> ~0; uniform -> ~log(V)."""
+    labels = jax.random.randint(jax.random.key(seed), (B,), 0, V)
+    uniform = jnp.zeros((B, V))
+    np.testing.assert_allclose(float(cross_entropy(uniform, labels)),
+                               np.log(V), rtol=1e-4)
+    perfect = jax.nn.one_hot(labels, V) * 100.0
+    assert float(cross_entropy(perfect, labels)) < 1e-3
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 5), st.integers(1, 300))
+def test_lrn_pwl_error_bound_holds_for_any_input_scale(scale, seed):
+    """The paper's 0.5% bound must hold across input magnitudes."""
+    x = jax.random.normal(jax.random.key(seed), (1, 4, 4, 16)) * scale * 10
+    exact = ref.lrn_ref(x)
+    approx = lrn_pwl(x, n_sub_bits=2)
+    rel = np.max(np.abs(np.asarray(approx - exact))
+                 / (np.abs(np.asarray(exact)) + 1e-9))
+    assert rel < 0.005
+
+
+@settings(**SETTINGS)
+@given(st.integers(10, 4000), st.integers(0, 100))
+def test_compression_error_feedback_bounded(n, seed):
+    """Quantization with error feedback: residual stays bounded by one
+    quantization step; dequantized+residual reconstructs the input."""
+    g = {"w": jax.random.normal(jax.random.key(seed), (n,)) * 3}
+    state = init_compression(g)
+    deq, state2 = compress_grads(g, state)
+    err = np.asarray(state2.error["w"])
+    scale_bound = 3 * np.max(np.abs(np.asarray(g["w"]))) / 127.0
+    assert np.max(np.abs(err)) <= scale_bound + 1e-6
+    np.testing.assert_allclose(np.asarray(deq["w"]) + err,
+                               np.asarray(g["w"]), rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(st.integers(8, 2048), st.integers(2, 64), st.integers(1, 4))
+def test_expert_capacity_covers_expected_load(T, E, K):
+    from repro.core.config import ModelConfig
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=8,
+                      n_heads=1, n_kv_heads=1, d_ff=8, vocab=8,
+                      n_experts=E, top_k=min(K, E))
+    C = expert_capacity(T, cfg)
+    assert C * E >= T * cfg.top_k            # capacity >= perfect balance
+    assert C % 8 == 0
