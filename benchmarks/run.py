@@ -1,15 +1,104 @@
 """Benchmark harness: one entry per paper table/figure + the LM roofline.
 
-Prints ``name,us_per_call,derived`` CSV lines at the end (harness contract).
+Prints ``name,us_per_call,derived`` CSV lines at the end (harness contract)
+and writes ``BENCH_conv.json`` (name -> us_per_call + chosen tile plan) so
+future PRs can diff conv-pipeline performance machine-readably.
 Run: PYTHONPATH=src python -m benchmarks.run [--fast]
 """
 from __future__ import annotations
 
 import argparse
 import io
+import json
 import sys
 import time
 from contextlib import redirect_stdout
+
+BENCH_JSON = "BENCH_conv.json"
+
+
+def conv_bench(fast: bool) -> dict:
+    """Tiled-conv trajectory numbers for BENCH_conv.json.
+
+    * measured us/call for a smoke-scale fused conv: XLA ref vs the tiled
+      Pallas kernel (interpret mode here, so the Pallas number tracks
+      kernel-body work, not TPU wall clock)
+    * the autotuned plan + modelled roofline time for every AlexNet and
+      VGG-16 conv layer
+    * a before/after row: the seed's full-height plan vs the tuned tiled
+      plan on VGG conv2 (the layer whose full-height accumulator busts
+      the 16 MiB VMEM budget)
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.kernels import autotune, ops
+
+    rows: dict = {}
+
+    # -- measured: smoke-scale fused conv, ref vs tiled pallas ------------
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (1, 32, 32, 8), jnp.float32)
+    w = jax.random.normal(key, (3, 3, 8, 16), jnp.float32) * 0.2
+    b = jnp.zeros((16,))
+    plan = autotune.plan_for_layer(x.shape, w.shape, pad=1, pool="max",
+                                   vmem_budget=256 * 1024)
+
+    def timed(fn, iters):
+        fn().block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn().block_until_ready()
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    iters = 2 if fast else 5
+    rows["conv_smoke_ref_fused"] = {
+        "us_per_call": timed(lambda: ops.fused_conv(
+            x, w, b, pad=1, pool="max"), iters), "plan": None}
+    rows["conv_smoke_tiled_pallas"] = {
+        "us_per_call": timed(lambda: ops.fused_conv(
+            x, w, b, pad=1, pool="max", use_pallas=True, plan=plan), iters),
+        "plan": plan.to_dict()}
+
+    # -- modelled: autotuned plan per paper conv layer --------------------
+    for name in ("alexnet", "vgg16"):
+        cfg = get_config(name)
+        h, c = cfg.input_hw, cfg.input_ch
+        conv_i = 0
+        for i, l in enumerate(cfg.layers):
+            if l.kind == "conv":
+                nxt = cfg.layers[i + 1] if i + 1 < len(cfg.layers) else None
+                pool = nxt if nxt is not None and nxt.kind == "pool" else None
+                shape = autotune.ConvShape(
+                    h=h, w=h, c=c, kh=l.kernel, kw=l.kernel, m=l.out_ch,
+                    stride=l.stride, pad=l.pad, groups=l.groups,
+                    pool=(pool.pool if pool else None),
+                    pool_k=(pool.kernel if pool else 2),
+                    pool_s=(pool.stride if pool else 2), dtype=cfg.dtype)
+                p = autotune.get_plan(shape, vmem_budget=cfg.vmem_budget)
+                conv_i += 1
+                rows[f"{name}_conv{conv_i}_model"] = {
+                    "us_per_call": p.t_model * 1e6, "plan": p.to_dict()}
+                h = (h + 2 * l.pad - l.kernel) // l.stride + 1
+                c = l.out_ch
+            elif l.kind == "pool":
+                h = (h - l.kernel) // l.stride + 1
+
+    # -- before/after: seed full-height knobs vs tuned tiling -------------
+    s = autotune.ConvShape(h=224, w=224, c=64, kh=3, kw=3, m=64, pad=1)
+    tc, tm = autotune.score_plan(s, 8, 32, 0)
+    tuned = autotune.get_plan(s)
+    rows["fused_full_height_vs_tiled(vgg_conv2)"] = {
+        "before": {"plan": {"c_blk": 8, "m_blk": 32, "oh_blk": 0},
+                   "vmem_bytes": autotune.conv_vmem_bytes(s, 8, 32, 0),
+                   "t_model_us": max(tc, tm) * 1e6,
+                   "fits_16MiB": autotune.conv_vmem_bytes(s, 8, 32, 0)
+                   <= 16 * 2 ** 20},
+        "after": {"plan": tuned.to_dict(),
+                  "t_model_us": tuned.t_model * 1e6,
+                  "fits_16MiB": tuned.vmem_bytes <= 16 * 2 ** 20}}
+    return rows
 
 
 def main() -> None:
@@ -30,16 +119,27 @@ def main() -> None:
         csv_rows.append((name, (time.perf_counter() - t0) * 1e6))
 
     run("lrn_accuracy(paper_0.5pct_claim)", lrn_accuracy.main)
-    run("fig7_dse(vec_x_cu_sweep)", fig7_dse.main)
+    run("fig7_dse(vec_x_cu_x_ohblk_sweep)", fig7_dse.main)
     run("bandwidth(fusion_claim)", bandwidth.main)
     if not args.fast:
         run("table1(alexnet_vgg_throughput)", table1_comparison.main)
         run("fig8_timeline(stage_profile)", fig8_timeline.main)
     run("lm_roofline(assigned_archs)", lm_roofline.main)
 
+    conv_rows = conv_bench(args.fast)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(conv_rows, f, indent=1)
+    print(f"\nwrote {BENCH_JSON} ({len(conv_rows)} rows)")
+
     print("\nname,us_per_call,derived")
     for name, us in csv_rows:
         print(f"{name},{us:.0f},ok")
+    for name, row in conv_rows.items():
+        if "us_per_call" in row:
+            p = row.get("plan")
+            derived = (f"plan=c{p['c_blk']}xm{p['m_blk']}xh{p['oh_blk']}"
+                       if p else "ref")
+            print(f"{name},{row['us_per_call']:.0f},{derived}")
 
 
 if __name__ == "__main__":

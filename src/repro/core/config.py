@@ -220,6 +220,10 @@ class CNNConfig:
     cu_num: int = 16
     use_lrn: bool = False
     dtype: str = "float32"            # the paper implements full fp32
+    # --- spatial tiling / DSE (the Fig. 7 sweep, per layer) ---
+    oh_blk: int = 0                   # line-buffer depth in conv rows (0=full)
+    autotune: bool = True             # per-layer (c_blk,m_blk,oh_blk) DSE
+    vmem_budget: int = 16 * 2 ** 20   # per-core VMEM the tuner must fit
 
     def smoke(self) -> "CNNConfig":
         """Shrink channel counts for CPU tests (same topology)."""

@@ -114,5 +114,6 @@ def fusion_savings(cfg: CNNConfig, batch: int = 1) -> Tuple[int, int, float]:
 
 def measure_traffic(fn, *args) -> float:
     """Compiled bytes-accessed for fn(*args) (XLA cost analysis)."""
+    from repro.core.roofline import cost_analysis_dict
     compiled = jax.jit(fn).lower(*args).compile()
-    return float(compiled.cost_analysis().get("bytes accessed", 0.0))
+    return float(cost_analysis_dict(compiled).get("bytes accessed", 0.0))

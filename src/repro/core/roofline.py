@@ -22,6 +22,38 @@ from typing import Dict, Optional
 PEAK_FLOPS = 197e12          # bf16
 HBM_BW = 819e9               # bytes/s
 ICI_BW = 50e9                # bytes/s per link
+VMEM_BYTES = 16 * 2 ** 20    # per-core VMEM (the TPU's "DSP budget")
+MXU_DIM = 128                # systolic array dimension
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax versions: older releases
+    return a one-element list of dicts, newer ones the dict itself."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def mxu_utilization(c_blk: int, m_blk: int) -> float:
+    """Fraction of the 128x128 MXU fed by a (c_blk, m_blk) conv tile.
+
+    The contraction/output tile dims map onto the systolic array; tiles
+    smaller than 128 leave lanes idle — the TPU analogue of the paper's
+    VEC_SIZE channel-padding waste (Fig. 7's reason VEC=8 beats VEC=16).
+    """
+    return min(1.0, c_blk / MXU_DIM) * min(1.0, m_blk / MXU_DIM)
+
+
+def time_bounds(flops: float, hbm_bytes: float, *,
+                mxu_util: float = 1.0) -> "tuple[float, float]":
+    """(t_compute, t_memory) roofline terms for one kernel invocation.
+
+    This is the per-kernel cost model the conv DSE autotuner scores plans
+    with (kernels/autotune.py) — the same two terms as the whole-model
+    roofline above, restricted to a single pallas_call.
+    """
+    return flops / (PEAK_FLOPS * max(mxu_util, 1e-9)), hbm_bytes / HBM_BW
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -147,7 +179,7 @@ class RooflineReport:
 
 def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
                      chips: int, model_flops: float) -> RooflineReport:
-    ca = compiled.cost_analysis()
+    ca = cost_analysis_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     hlo = compiled.as_text()

@@ -1,0 +1,271 @@
+"""Per-layer design-space exploration for the tiled conv pipeline.
+
+The paper tunes its two throughput parameters (VEC_SIZE, CU_NUM) with an
+offline sweep against the DE5-net's DSP budget and DDR roofline (Fig. 7).
+This module is that sweep for the TPU kernel, with one more axis: the
+line-buffer depth ``oh_blk`` introduced by spatial tiling.
+
+  * :func:`conv_vmem_bytes` — analytic VMEM working-set model of one
+    ``conv_pipe`` grid step (the feasibility constraint; VMEM is the TPU's
+    "DSP count").
+  * :func:`enumerate_plans` — all legal ``(c_blk, m_blk, oh_blk)`` points
+    under a VMEM budget.
+  * :func:`score_plan` — roofline cost model (``core.roofline.time_bounds``):
+    MXU-utilization-scaled compute vs. the DMA traffic the BlockSpec index
+    maps actually generate (x is re-fetched once per M-tile, w once per
+    (batch, H-tile), halo rows are re-fetched once per neighbouring tile).
+  * :func:`get_plan` — pick the best-scoring feasible plan, memoised in a
+    process-wide registry keyed by ``(layer shape, dtype, backend)``.
+  * :func:`measure_plan` — optional wall-clock refinement for a shortlist
+    of model-scored candidates (on-hardware benchmarking; the model alone
+    is used by default because interpret mode timing is meaningless).
+
+Plans are plain frozen dataclasses so they can ride through ``jax.jit``
+static arguments, and the registry serialises to JSON for the benchmark
+trajectory file (``BENCH_conv.json``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.roofline import (MXU_DIM, VMEM_BYTES, mxu_utilization,
+                                 time_bounds)
+from repro.kernels.conv_pipe import _round_up, conv_tile_geometry
+
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}
+
+
+@dataclass(frozen=True)
+class ConvShape:
+    """Static signature of one conv(+pool) layer — the registry key."""
+    h: int
+    w: int
+    c: int                      # total input channels (all groups)
+    kh: int
+    kw: int
+    m: int                      # total output channels (all groups)
+    stride: int = 1
+    pad: int = 0
+    groups: int = 1
+    pool: Optional[str] = None
+    pool_k: int = 2
+    pool_s: int = 2
+    dtype: str = "float32"
+
+    @property
+    def oh(self) -> int:
+        return (self.h + 2 * self.pad - self.kh) // self.stride + 1
+
+    @property
+    def ow(self) -> int:
+        return (self.w + 2 * self.pad - self.kw) // self.stride + 1
+
+    @property
+    def macs(self) -> int:
+        """Multiply-accumulates per image (grouped conv divides C)."""
+        return (self.oh * self.ow * self.m * self.kh * self.kw
+                * (self.c // self.groups))
+
+
+@dataclass(frozen=True)
+class ConvPlan:
+    """A tuned tiling point. Hashable => usable as a jit static argument."""
+    c_blk: int
+    m_blk: int
+    oh_blk: int
+    vmem_bytes: int = 0         # modelled working set (informational)
+    t_model: float = 0.0        # modelled roofline time, seconds/image
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def conv_vmem_bytes(shape: ConvShape, c_blk: int, m_blk: int,
+                    oh_blk: int) -> int:
+    """VMEM working set of one grid step of the tiled conv_pipe kernel.
+
+    Pipelined refs (x tile, w tile, bias, out tile) are double-buffered by
+    Pallas (factor 2); the fp32 accumulator scratch is single-buffered.
+    """
+    dt = _DTYPE_BYTES.get(shape.dtype, 4)
+    cg = shape.c // shape.groups
+    mg = shape.m // shape.groups
+    c_blk = min(c_blk, cg)
+    m_blk = min(m_blk, mg)
+    wp = shape.w + 2 * shape.pad
+    _, pr, oh_ext, hp_blk, _ = conv_tile_geometry(
+        shape.oh, oh_blk, stride=shape.stride, kh=shape.kh,
+        pool=shape.pool, pool_k=shape.pool_k, pool_s=shape.pool_s)
+    pw = ((shape.ow - shape.pool_k) // shape.pool_s + 1
+          if shape.pool else shape.ow)
+    x_tile = hp_blk * wp * c_blk * dt
+    w_tile = shape.kh * shape.kw * c_blk * m_blk * dt
+    b_tile = m_blk * dt
+    o_tile = pr * pw * m_blk * dt
+    acc = oh_ext * shape.ow * m_blk * 4
+    return 2 * (x_tile + w_tile + b_tile + o_tile) + acc
+
+
+def score_plan(shape: ConvShape, c_blk: int, m_blk: int,
+               oh_blk: int) -> Tuple[float, float]:
+    """(t_compute, t_memory) roofline terms per image for one plan.
+
+    Models the traffic the BlockSpec index maps actually generate:
+      x  — re-fetched for every M-tile; halo rows re-fetched per H-tile
+      w  — re-fetched for every H-tile (its map ignores the H axis)
+      out — written once
+    Channel padding waste (Fig. 7's VEC_SIZE argument) shows up through
+    the padded c/m tile counts.
+    """
+    dt = _DTYPE_BYTES.get(shape.dtype, 4)
+    cg, mg = shape.c // shape.groups, shape.m // shape.groups
+    c_blk, m_blk = min(c_blk, cg), min(m_blk, mg)
+    cgp, mgp = _round_up(cg, c_blk), _round_up(mg, m_blk)
+    n_c, n_m = cgp // c_blk, shape.groups * (mgp // m_blk)
+    wp = shape.w + 2 * shape.pad
+    n_h, pr, oh_ext, hp_blk, _ = conv_tile_geometry(
+        shape.oh, oh_blk, stride=shape.stride, kh=shape.kh,
+        pool=shape.pool, pool_k=shape.pool_k, pool_s=shape.pool_s)
+    pw = ((shape.ow - shape.pool_k) // shape.pool_s + 1
+          if shape.pool else shape.ow)
+
+    x_bytes = n_h * n_m * n_c * hp_blk * wp * c_blk * dt
+    w_bytes = n_h * n_m * n_c * shape.kh * shape.kw * c_blk * m_blk * dt
+    o_bytes = n_h * pr * pw * (n_m * m_blk) * dt
+    # padded-lane compute: the kernel multiplies the padded tiles
+    flops = 2 * (n_h * pr if shape.pool is None else n_h * oh_ext) \
+        * shape.ow * (n_m * m_blk) * shape.kh * shape.kw * cgp
+    return time_bounds(flops, x_bytes + w_bytes + o_bytes,
+                       mxu_util=mxu_utilization(c_blk, m_blk))
+
+
+def _pow2_upto(limit: int, lo: int = 8) -> List[int]:
+    vals, v = [], lo
+    while v <= limit:
+        vals.append(v)
+        v *= 2
+    if not vals or vals[-1] != limit:
+        vals.append(limit)
+    return vals
+
+
+def enumerate_plans(shape: ConvShape,
+                    vmem_budget: int = VMEM_BYTES) -> List[ConvPlan]:
+    """All (c_blk, m_blk, oh_blk) points that fit the VMEM budget."""
+    cg, mg = shape.c // shape.groups, shape.m // shape.groups
+    c_cands = sorted({min(v, cg) for v in _pow2_upto(min(cg, 2 * MXU_DIM))})
+    m_cands = sorted({min(v, mg) for v in _pow2_upto(min(mg, 2 * MXU_DIM))})
+    step = shape.pool_s if shape.pool else 1
+    oh_cands = sorted({min(_round_up(v, step), _round_up(shape.oh, step))
+                       for v in (1, 2, 4, 8, 16, 32, 64, shape.oh)})
+    plans = []
+    for cb in c_cands:
+        for mb in m_cands:
+            for ob in oh_cands:
+                vmem = conv_vmem_bytes(shape, cb, mb, ob)
+                if vmem > vmem_budget:
+                    continue
+                tc, tm = score_plan(shape, cb, mb, ob)
+                plans.append(ConvPlan(cb, mb, ob, vmem_bytes=vmem,
+                                      t_model=max(tc, tm)))
+    return plans
+
+
+def best_plan(shape: ConvShape,
+              vmem_budget: int = VMEM_BYTES) -> ConvPlan:
+    """The lowest modelled-time feasible plan (larger tiles break ties —
+    fewer grid steps means less per-step launch/DMA fixed cost)."""
+    plans = enumerate_plans(shape, vmem_budget)
+    if not plans:
+        raise ValueError(
+            f"no feasible conv plan for {shape} under {vmem_budget} B VMEM")
+    return min(plans, key=lambda p: (p.t_model,
+                                     -(p.c_blk * p.m_blk * p.oh_blk)))
+
+
+def measure_plan(shape: ConvShape, plan: ConvPlan, *, iters: int = 3,
+                 interpret: bool = True) -> float:
+    """Wall-clock seconds/call for a plan (hardware refinement hook)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.conv_pipe import conv_pipe
+
+    dt = jnp.float32 if shape.dtype == "float32" else jnp.bfloat16
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (1, shape.h, shape.w, shape.c), jnp.float32)
+    w = jax.random.normal(key, (shape.kh, shape.kw,
+                                shape.c // shape.groups, shape.m),
+                          jnp.float32) * 0.1
+    b = jnp.zeros((shape.m,))
+    args = [a.astype(dt) for a in (x, w, b)]
+
+    def run():
+        return conv_pipe(args[0], args[1], args[2], stride=shape.stride,
+                         pad=shape.pad, pool=shape.pool, pool_k=shape.pool_k,
+                         pool_s=shape.pool_s, c_blk=plan.c_blk,
+                         m_blk=plan.m_blk, oh_blk=plan.oh_blk,
+                         groups=shape.groups, interpret=interpret)
+
+    run().block_until_ready()                 # compile / warm up
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        run().block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+# ---------------------------------------------------------------------------
+# plan registry: (layer shape, dtype, backend) -> ConvPlan
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[Tuple[ConvShape, str, int], ConvPlan] = {}
+
+
+def get_plan(shape: ConvShape, *, vmem_budget: int = VMEM_BYTES,
+             backend: str = "tpu") -> ConvPlan:
+    """Memoised best plan for a layer shape (dtype rides inside shape).
+
+    The budget is part of the key: a plan tuned for a tight budget must
+    not be handed to a caller with the full 16 MiB (or vice versa)."""
+    key = (shape, backend, vmem_budget)
+    plan = _REGISTRY.get(key)
+    if plan is None:
+        plan = best_plan(shape, vmem_budget)
+        _REGISTRY[key] = plan
+    return plan
+
+
+def plan_for_layer(x_shape: Tuple[int, ...], w_shape: Tuple[int, ...], *,
+                   stride: int = 1, pad: int = 0, groups: int = 1,
+                   pool: Optional[str] = None, pool_k: int = 2,
+                   pool_s: int = 2, dtype: str = "float32",
+                   vmem_budget: int = VMEM_BYTES,
+                   backend: str = "tpu") -> ConvPlan:
+    """Convenience: build the ConvShape key from array shapes and tune."""
+    _, h, w, c = x_shape
+    kh, kw, _, m = w_shape
+    shape = ConvShape(h=h, w=w, c=c, kh=kh, kw=kw, m=m, stride=stride,
+                      pad=pad, groups=groups, pool=pool, pool_k=pool_k,
+                      pool_s=pool_s, dtype=dtype)
+    return get_plan(shape, vmem_budget=vmem_budget, backend=backend)
+
+
+def clear_registry() -> None:
+    _REGISTRY.clear()
+
+
+def registry_snapshot() -> List[dict]:
+    """JSON-serialisable view of every tuned layer (for BENCH_conv.json)."""
+    return [{"shape": dataclasses.asdict(k[0]), "backend": k[1],
+             "vmem_budget": k[2], "plan": p.to_dict()} for k, p in sorted(
+                 _REGISTRY.items(), key=lambda kv: repr(kv[0]))]
+
+
+def dump_registry(path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(registry_snapshot(), f, indent=1)

@@ -1,4 +1,5 @@
-"""conv_pipe — the PipeCNN pipeline as ONE fused Pallas TPU kernel.
+"""conv_pipe — the PipeCNN pipeline as ONE fused, spatially-tiled Pallas
+TPU kernel.
 
 PipeCNN cascades MemRD -> Conv -> Pool -> MemWR through OpenCL channels so
 inter-stage data never touches DDR. On TPU the same dataflow is one
@@ -11,14 +12,29 @@ inter-stage data never touches DDR. On TPU the same dataflow is one
   * bias + ReLU + line-buffer pooling run in the epilogue while the tile is
     still in VMEM (the Conv->Pool channel).
 
-Grid: (batch, M_tiles, C_tiles) with the input-channel axis LAST and
-"arbitrary" semantics — the fp32 VMEM scratch accumulates partial sums
-across C-tiles (the paper's delayed-buffer accumulator; the MXU needs no
-II=2 shift register).
+Grid: ``(batch, H_tiles, M_tiles, C_tiles)`` with the input-channel axis
+LAST and "arbitrary" semantics — the fp32 VMEM scratch accumulates partial
+sums across C-tiles (the paper's delayed-buffer accumulator; the MXU needs
+no II=2 shift register).
+
+Spatial tiling (the FPGA line buffer): each grid step DMAs only the
+``(oh_ext - 1) * stride + KH`` input rows its output-row tile needs. The
+input tiles OVERLAP by the halo rows (``KH - stride`` per conv step plus
+``pool_k - pool_s`` recomputed conv rows per pool step), which standard
+blocked BlockSpecs cannot express, so the x spec uses *unblocked* indexing:
+its index map returns element offsets directly. The fp32 accumulator
+shrinks from (OH, OW, m_blk) to (oh_ext, OW, m_blk), which is what lets
+paper-scale layers (VGG-16 conv1: 224x224x64) fit a 16 MiB VMEM budget.
+
+Grouped convolution (AlexNet's two towers) is folded into the grid: the
+M-tile axis spans all groups' output tiles and the x index map offsets the
+input-channel window into the owning group's channel slab — one
+``pallas_call``, no per-group Python loop, no activation concatenate.
 
 Block-size knobs map to the paper's throughput parameters:
-  C_BLK  <-> VEC_SIZE  (input-feature vectorization)
-  M_BLK  <-> CU_NUM    (parallel output-feature CUs)
+  C_BLK  <-> VEC_SIZE     (input-feature vectorization)
+  M_BLK  <-> CU_NUM       (parallel output-feature CUs)
+  OH_BLK <-> line-buffer depth (rows resident on chip)
 """
 from __future__ import annotations
 
@@ -37,35 +53,74 @@ except Exception:  # pragma: no cover
     _VMEM = None
 
 
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def conv_tile_geometry(oh: int, oh_blk: int, *, stride: int, kh: int,
+                       pool: Optional[str], pool_k: int, pool_s: int
+                       ) -> Tuple[int, int, int, int, int]:
+    """Resolve the H-tiling geometry shared by kernel, tuner and tests.
+
+    Returns ``(n_h, pr, oh_ext, hp_blk, row_step)``:
+      n_h      number of H-tiles in the grid
+      pr       final-output rows produced per tile (pooled rows if pooling)
+      oh_ext   conv rows computed per tile (pr*pool_s span + pool_k window)
+      hp_blk   input rows DMA'd per tile (the line-buffer depth)
+      row_step input-row element offset between consecutive tiles
+
+    ``oh_blk`` counts conv-output rows per tile; 0 means "full height".
+    With pooling it is rounded up to a multiple of ``pool_s`` so every pool
+    window is computed by exactly one tile (windows that straddle the tile
+    boundary are handled by recomputing ``pool_k - pool_s`` conv rows).
+    """
+    oh_blk = min(oh_blk, oh) if oh_blk else oh
+    oh_blk = max(1, oh_blk)
+    if pool is not None:
+        oh_blk = _round_up(oh_blk, pool_s)
+        ph = (oh - pool_k) // pool_s + 1
+        pr = oh_blk // pool_s
+        n_h = -(-ph // pr)
+        oh_ext = (pr - 1) * pool_s + pool_k
+    else:
+        pr = oh_blk
+        n_h = -(-oh // oh_blk)
+        oh_ext = oh_blk
+    hp_blk = (oh_ext - 1) * stride + kh
+    row_step = oh_blk * stride
+    return n_h, pr, oh_ext, hp_blk, row_step
+
+
 def _conv_pipe_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
-                      stride: int, oh: int, ow: int, relu: bool,
+                      stride: int, oh_ext: int, ow: int, relu: bool,
                       pool: Optional[str], pool_k: int, pool_s: int,
-                      n_c_tiles: int):
-    """One (batch, M-tile) output block; accumulates over C-tiles."""
-    c_idx = pl.program_id(2)
+                      pr: int, n_c_tiles: int):
+    """One (batch, H-tile, M-tile) output block; accumulates over C-tiles."""
+    c_idx = pl.program_id(3)
 
     @pl.when(c_idx == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[0]                                   # (HP, WP, C_BLK)
+    x = x_ref[0]                                   # (HP_BLK, WP, C_BLK)
     w = w_ref[...]                                 # (KH, KW, C_BLK, M_BLK)
     kh, kw = w.shape[0], w.shape[1]
     c_blk, m_blk = w.shape[2], w.shape[3]
 
-    # on-the-fly im2col: kh*kw strided slices, each a (OH*OW, C) x (C, M)
+    # on-the-fly im2col: kh*kw strided slices, each a (OH_EXT*OW, C) x (C, M)
     # matmul on the MXU, accumulated in fp32 VMEM scratch.
     acc = acc_ref[...]
     for i in range(kh):
         for j in range(kw):
             patch = jax.lax.slice(
                 x, (i, j, 0),
-                (i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, c_blk),
-                (stride, stride, 1))               # (OH, OW, C_BLK)
+                (i + (oh_ext - 1) * stride + 1,
+                 j + (ow - 1) * stride + 1, c_blk),
+                (stride, stride, 1))               # (OH_EXT, OW, C_BLK)
             acc += jax.lax.dot_general(
-                patch.reshape(oh * ow, c_blk), w[i, j],
+                patch.reshape(oh_ext * ow, c_blk), w[i, j],
                 (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32).reshape(oh, ow, m_blk)
+                preferred_element_type=jnp.float32).reshape(oh_ext, ow, m_blk)
     acc_ref[...] = acc
 
     @pl.when(c_idx == n_c_tiles - 1)
@@ -76,14 +131,14 @@ def _conv_pipe_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
         if pool is not None:
             # line-buffer pooling: the conv tile is still in VMEM; reduce
             # pool_k x pool_k strided windows (the (L+1)-input pool logic).
-            php = (oh - pool_k) // pool_s + 1
+            # oh_ext was sized so every window lies inside this tile.
             pwp = (ow - pool_k) // pool_s + 1
             win = None
             for i in range(pool_k):
                 for j in range(pool_k):
                     sl = jax.lax.slice(
                         y, (i, j, 0),
-                        (i + (php - 1) * pool_s + 1,
+                        (i + (pr - 1) * pool_s + 1,
                          j + (pwp - 1) * pool_s + 1, m_blk),
                         (pool_s, pool_s, 1))
                     if win is None:
@@ -99,16 +154,24 @@ def _conv_pipe_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
 def conv_pipe(x: jax.Array, w: jax.Array, b: jax.Array, *,
               stride: int = 1, pad: int = 0, relu: bool = True,
               pool: Optional[str] = None, pool_k: int = 2, pool_s: int = 2,
-              c_blk: int = 8, m_blk: int = 32,
-              interpret: bool = True) -> jax.Array:
-    """Fused conv(+bias)(+ReLU)(+pool). x (B,H,W,C); w (KH,KW,C,M); b (M,).
+              c_blk: int = 8, m_blk: int = 32, oh_blk: int = 0,
+              groups: int = 1, interpret: bool = True) -> jax.Array:
+    """Fused conv(+bias)(+ReLU)(+pool). x (B,H,W,C); w (KH,KW,C/G,M); b (M,).
 
-    c_blk/m_blk are the VEC_SIZE/CU_NUM analogues. interpret=True runs the
-    kernel body on CPU (this container); on TPU pass interpret=False.
+    c_blk/m_blk are the VEC_SIZE/CU_NUM analogues; oh_blk is the line-buffer
+    depth in conv-output rows (0 = full height, the seed behaviour).
+    ``groups`` runs grouped convolution inside the one kernel (w's channel
+    axis is per-group). interpret=True runs the kernel body on CPU (this
+    container); on TPU pass interpret=False.
     """
     B, H, W, C = x.shape
     KH, KW, _, M = w.shape
-    m_orig = M
+    if C % groups or M % groups:
+        raise ValueError(f"groups={groups} must divide C={C} and M={M}")
+    cg, mg = C // groups, M // groups
+    if w.shape[2] != cg:
+        raise ValueError(f"w channel axis {w.shape[2]} != C/groups = {cg}")
+    m_orig = mg
     if pad:
         x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
         H, W = H + 2 * pad, W + 2 * pad
@@ -120,42 +183,84 @@ def conv_pipe(x: jax.Array, w: jax.Array, b: jax.Array, *,
     else:
         ph, pw = OH, OW
 
-    c_blk = min(c_blk, C)
-    m_blk = min(m_blk, M)
-    if C % c_blk:
-        padc = c_blk - C % c_blk
-        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, padc)))
-        w = jnp.pad(w, ((0, 0), (0, 0), (0, padc), (0, 0)))
-        C += padc
-    if M % m_blk:
-        padm = m_blk - M % m_blk
-        w = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, padm)))
-        b = jnp.pad(b, (0, padm))
-        M += padm
-    n_c, n_m = C // c_blk, M // m_blk
+    c_blk = min(c_blk, cg)
+    m_blk = min(m_blk, mg)
+    # pad channels PER GROUP so group slabs stay c_blk/m_blk aligned
+    cgp, mgp = _round_up(cg, c_blk), _round_up(mg, m_blk)
+    if cgp != cg:
+        x = jnp.pad(x.reshape(B, H, W, groups, cg),
+                    ((0, 0),) * 3 + ((0, 0), (0, cgp - cg))
+                    ).reshape(B, H, W, groups * cgp)
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, cgp - cg), (0, 0)))
+    if mgp != mg:
+        w = jnp.pad(w.reshape(KH, KW, cgp, groups, mg),
+                    ((0, 0),) * 3 + ((0, 0), (0, mgp - mg))
+                    ).reshape(KH, KW, cgp, groups * mgp)
+        b = jnp.pad(b.reshape(groups, mg), ((0, 0), (0, mgp - mg))).reshape(-1)
+    else:
+        w = w.reshape(KH, KW, cgp, groups * mgp)
+    n_c, n_mg = cgp // c_blk, mgp // m_blk
+    n_m = groups * n_mg
 
-    # rows of x needed for one full-output-height block
-    hp = (OH - 1) * stride + KH
+    n_h, pr, oh_ext, hp_blk, row_step = conv_tile_geometry(
+        OH, oh_blk, stride=stride, kh=KH,
+        pool=pool, pool_k=pool_k, pool_s=pool_s)
+
+    # bottom-pad the input so the last tile's halo read stays in bounds
+    # (its surplus conv rows are garbage-from-zeros, sliced off below)
+    need_h = (n_h - 1) * row_step + hp_blk
+    if need_h > H:
+        x = jnp.pad(x, ((0, 0), (0, need_h - H), (0, 0), (0, 0)))
 
     kernel = functools.partial(
-        _conv_pipe_kernel, stride=stride, oh=OH, ow=OW, relu=relu,
-        pool=pool, pool_k=pool_k, pool_s=pool_s, n_c_tiles=n_c)
+        _conv_pipe_kernel, stride=stride, oh_ext=oh_ext, ow=OW, relu=relu,
+        pool=pool, pool_k=pool_k, pool_s=pool_s, pr=pr, n_c_tiles=n_c)
 
-    scratch = [pltpu.VMEM((OH, OW, m_blk), jnp.float32)]
+    # x tiles overlap by the halo rows => element-offset (unblocked) indexing;
+    # the group of M-tile mi selects the input-channel slab.
+    x_spec = pl.BlockSpec(
+        (1, hp_blk, W, c_blk),
+        lambda bi, hi, mi, ci: (bi, hi * row_step, 0,
+                                (mi // n_mg) * cgp + ci * c_blk),
+        indexing_mode=pl.Unblocked())
+    in_specs = [
+        x_spec,
+        pl.BlockSpec((KH, KW, c_blk, m_blk),
+                     lambda bi, hi, mi, ci: (0, 0, ci, mi)),
+        pl.BlockSpec((m_blk,), lambda bi, hi, mi, ci: (mi,)),
+    ]
+    out_spec = pl.BlockSpec((1, pr, pw, m_blk),
+                            lambda bi, hi, mi, ci: (bi, hi, 0, mi))
+    out_shape = jax.ShapeDtypeStruct((B, n_h * pr, pw, groups * mgp), x.dtype)
+
+    acc_shape = (oh_ext, OW, m_blk)
+    if pltpu is not None:
+        outs = out_shape
+        out_specs = out_spec
+        scratch = [pltpu.VMEM(acc_shape, jnp.float32)]
+    else:
+        # No TPU plugin: express the accumulator as a second output whose
+        # index map pins every grid step to the same block — Pallas keeps a
+        # revisited block resident, giving scratch semantics without any
+        # memory-space annotation. The dummy output is dropped below.
+        outs = [out_shape, jax.ShapeDtypeStruct(acc_shape, jnp.float32)]
+        out_specs = [out_spec,
+                     pl.BlockSpec(acc_shape, lambda bi, hi, mi, ci: (0, 0, 0))]
+        scratch = []
 
     out = pl.pallas_call(
         kernel,
-        grid=(B, n_m, n_c),
-        in_specs=[
-            pl.BlockSpec((1, hp, W, c_blk), lambda bi, mi, ci: (bi, 0, 0, ci)),
-            pl.BlockSpec((KH, KW, c_blk, m_blk),
-                         lambda bi, mi, ci: (0, 0, ci, mi)),
-            pl.BlockSpec((m_blk,), lambda bi, mi, ci: (mi,)),
-        ],
-        out_specs=pl.BlockSpec((1, ph, pw, m_blk),
-                               lambda bi, mi, ci: (bi, 0, 0, mi)),
-        out_shape=jax.ShapeDtypeStruct((B, ph, pw, M), x.dtype),
+        grid=(B, n_h, n_m, n_c),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=outs,
         scratch_shapes=scratch,
         interpret=interpret,
     )(x, w, b)
-    return out[..., :m_orig]
+    if pltpu is None:
+        out = out[0]
+    out = out[:, :ph]
+    if mgp != mg:
+        out = out.reshape(B, ph, pw, groups, mgp)[..., :m_orig]
+        out = out.reshape(B, ph, pw, groups * m_orig)
+    return out

@@ -15,11 +15,12 @@ from repro.kernels.lrn_pwl import LRN_ALPHA, LRN_BETA, LRN_K, LRN_N
 
 
 def conv_pipe_ref(x, w, b, *, stride=1, pad=0, relu=True, pool=None,
-                  pool_k=2, pool_s=2):
-    """Oracle for kernels.conv_pipe (conv + bias + ReLU + pool)."""
+                  pool_k=2, pool_s=2, groups=1):
+    """Oracle for kernels.conv_pipe (conv + bias + ReLU + pool, grouped)."""
     out = jax.lax.conv_general_dilated(
         x, w, (stride, stride), [(pad, pad), (pad, pad)],
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
     out = out + b
     if relu:
         out = jnp.maximum(out, 0.0)

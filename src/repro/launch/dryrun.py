@@ -202,7 +202,7 @@ def _cost_point(cfg, shape, mesh, rules):
         with mesh:
             compiled = jax.jit(fn, donate_argnums=donate).lower(
                 *args).compile()
-    ca = compiled.cost_analysis()
+    ca = R.cost_analysis_dict(compiled)
     coll = R.collective_bytes_from_hlo(compiled.as_text())
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core.config import CNNConfig, ConvLayer
 from repro.kernels import ops
+from repro.kernels.autotune import plan_for_layer
 from repro.models.layers import dense_init
 
 
@@ -86,19 +87,19 @@ def cnn_forward(params, x: jax.Array, cfg: CNNConfig, *,
                       pool=(pool.pool if pool else None),
                       pool_k=(pool.kernel if pool else 2),
                       pool_s=(pool.stride if pool else 2),
-                      use_pallas=use_pallas, c_blk=c_blk, m_blk=m_blk)
-            if l.groups == 1:
-                x = ops.fused_conv(x, p["w"], p["b"], **kw)
-            else:   # AlexNet two-tower convs: per-group fused kernels
-                g = l.groups
-                cg = x.shape[-1] // g
-                mg = l.out_ch // g
-                x = jnp.concatenate([
-                    ops.fused_conv(
-                        x[..., i * cg:(i + 1) * cg],
-                        p["w"][..., i * mg:(i + 1) * mg],
-                        p["b"][i * mg:(i + 1) * mg], **kw)
-                    for i in range(g)], axis=-1)
+                      use_pallas=use_pallas, c_blk=c_blk, m_blk=m_blk,
+                      oh_blk=cfg.oh_blk, groups=l.groups)
+            if use_pallas and cfg.autotune:
+                # per-layer DSE: replace the global VEC_SIZE/CU_NUM point
+                # with the tuned (c_blk, m_blk, oh_blk) plan for this shape
+                kw["plan"] = plan_for_layer(
+                    x.shape, p["w"].shape, stride=l.stride, pad=l.pad,
+                    groups=l.groups, pool=kw["pool"], pool_k=kw["pool_k"],
+                    pool_s=kw["pool_s"], dtype=cfg.dtype,
+                    vmem_budget=cfg.vmem_budget)
+            # grouped conv (AlexNet two-tower) runs INSIDE the one kernel:
+            # the M-tile grid axis spans groups, no concat on the hot path
+            x = ops.fused_conv(x, p["w"], p["b"], **kw)
         elif l.kind == "pool":
             from repro.kernels.ref import pool_ref
             x = pool_ref(x, l.pool, l.kernel, l.stride)

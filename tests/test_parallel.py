@@ -80,8 +80,8 @@ def run_in_mesh_subprocess(body: str):
 def test_sp_decode_attention_matches_reference():
     run_in_mesh_subprocess("""
         from repro.parallel.collectives import sp_decode_attention
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2, 4), ("data", "model"))
         B, H, D, S = 2, 4, 16, 32
         key = jax.random.key(0)
         q = jax.random.normal(key, (B, H, D))
@@ -102,8 +102,8 @@ def test_sp_decode_attention_matches_reference():
 def test_ring_matmul_overlapped_matches_dot():
     run_in_mesh_subprocess("""
         from repro.parallel.collectives import ring_matmul_overlapped
-        mesh = jax.make_mesh((1, 8), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((1, 8), ("data", "model"))
         M, K, N = 64, 32, 80
         x = jax.random.normal(jax.random.key(0), (M, K))
         w = jax.random.normal(jax.random.key(1), (K, N))
@@ -116,8 +116,8 @@ def test_ring_matmul_overlapped_matches_dot():
 def test_pipeline_parallel_forward_matches_sequential():
     run_in_mesh_subprocess("""
         from repro.parallel.pipeline_par import pipeline_forward
-        mesh = jax.make_mesh((8,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((8,), ("pod",))
         S_stages, B, D = 8, 16, 32
         ws = jax.random.normal(jax.random.key(0), (S_stages, D, D)) * 0.2
         x = jax.random.normal(jax.random.key(1), (B, D))
@@ -155,8 +155,8 @@ def test_sharded_train_step_matches_single_device():
         _, m0 = jax.jit(lambda s, b: train_step(s, b, cfg))(state, batch)
         loss0 = float(m0["loss"])
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((4, 2), ("data", "model"))
         with sharding_ctx(mesh, DEFAULT_RULES):
             pshard = param_shardings(mesh, DEFAULT_RULES, state.params)
             state_sh = state._replace(

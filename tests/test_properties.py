@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels import ref
 from repro.kernels.lrn_pwl import build_pwl_lut, lrn_pwl
