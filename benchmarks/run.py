@@ -3,7 +3,15 @@
 Prints ``name,us_per_call,derived`` CSV lines at the end (harness contract)
 and writes ``BENCH_conv.json`` (name -> us_per_call + chosen tile plan) so
 future PRs can diff conv-pipeline performance machine-readably.
+
+``--check-against PATH`` is the CI perf-regression gate: before
+overwriting BENCH_conv.json it compares every freshly modelled layer row
+(``*_model``, deterministic roofline times) against the committed
+trajectory at PATH and exits non-zero if any layer regressed more than
+10%. Measured (wall-clock) rows are noisy and are NOT gated.
+
 Run: PYTHONPATH=src python -m benchmarks.run [--fast]
+                                             [--check-against BENCH_conv.json]
 """
 from __future__ import annotations
 
@@ -15,6 +23,30 @@ import time
 from contextlib import redirect_stdout
 
 BENCH_JSON = "BENCH_conv.json"
+
+
+def conv_shapes(cfg, b: int = 1) -> list:
+    """ConvShape per conv layer of a CNNConfig (fused pool folded in),
+    tuned for serving batch ``b``."""
+    from repro.kernels import autotune
+
+    out = []
+    h, c = cfg.input_hw, cfg.input_ch
+    for i, l in enumerate(cfg.layers):
+        if l.kind == "conv":
+            nxt = cfg.layers[i + 1] if i + 1 < len(cfg.layers) else None
+            pool = nxt if nxt is not None and nxt.kind == "pool" else None
+            out.append(autotune.ConvShape(
+                h=h, w=h, c=c, kh=l.kernel, kw=l.kernel, m=l.out_ch,
+                stride=l.stride, pad=l.pad, groups=l.groups,
+                pool=(pool.pool if pool else None),
+                pool_k=(pool.kernel if pool else 2),
+                pool_s=(pool.stride if pool else 2), dtype=cfg.dtype, b=b))
+            h = (h + 2 * l.pad - l.kernel) // l.stride + 1
+            c = l.out_ch
+        elif l.kind == "pool":
+            h = (h - l.kernel) // l.stride + 1
+    return out
 
 
 def conv_bench(fast: bool) -> dict:
@@ -64,26 +96,10 @@ def conv_bench(fast: bool) -> dict:
     # -- modelled: autotuned plan per paper conv layer --------------------
     for name in ("alexnet", "vgg16"):
         cfg = get_config(name)
-        h, c = cfg.input_hw, cfg.input_ch
-        conv_i = 0
-        for i, l in enumerate(cfg.layers):
-            if l.kind == "conv":
-                nxt = cfg.layers[i + 1] if i + 1 < len(cfg.layers) else None
-                pool = nxt if nxt is not None and nxt.kind == "pool" else None
-                shape = autotune.ConvShape(
-                    h=h, w=h, c=c, kh=l.kernel, kw=l.kernel, m=l.out_ch,
-                    stride=l.stride, pad=l.pad, groups=l.groups,
-                    pool=(pool.pool if pool else None),
-                    pool_k=(pool.kernel if pool else 2),
-                    pool_s=(pool.stride if pool else 2), dtype=cfg.dtype)
-                p = autotune.get_plan(shape, vmem_budget=cfg.vmem_budget)
-                conv_i += 1
-                rows[f"{name}_conv{conv_i}_model"] = {
-                    "us_per_call": p.t_model * 1e6, "plan": p.to_dict()}
-                h = (h + 2 * l.pad - l.kernel) // l.stride + 1
-                c = l.out_ch
-            elif l.kind == "pool":
-                h = (h - l.kernel) // l.stride + 1
+        for conv_i, shape in enumerate(conv_shapes(cfg), start=1):
+            p = autotune.get_plan(shape, vmem_budget=cfg.vmem_budget)
+            rows[f"{name}_conv{conv_i}_model"] = {
+                "us_per_call": p.t_model * 1e6, "plan": p.to_dict()}
 
     # -- before/after: seed full-height knobs vs tuned tiling -------------
     s = autotune.ConvShape(h=224, w=224, c=64, kh=3, kw=3, m=64, pad=1)
@@ -98,13 +114,63 @@ def conv_bench(fast: bool) -> dict:
         "after": {"plan": tuned.to_dict(),
                   "t_model_us": tuned.t_model * 1e6,
                   "fits_16MiB": tuned.vmem_bytes <= 16 * 2 ** 20}}
+
+    # -- batched vs per-image: the PR 2 serving-path fold -----------------
+    # Two AlexNet layers at serve batch 8: per-image launches (b_blk
+    # pinned to 1) vs the batch-folded grid tuned jointly over
+    # (b,c,m,oh)_blk. The folded grid must model NO SLOWER at batch >= 4
+    # (acceptance). conv1 is compute-bound (C=3 starves the MXU) so
+    # folding only breaks even; conv3 is weight-traffic-bound (13x13
+    # spatial, 384 output channels) and folding amortizes each weight
+    # fetch over b_blk images — the paper's batched-FC argument on conv.
+    acfg = get_config("alexnet")
+    shapes_b8 = conv_shapes(acfg, b=8)
+    for li, sb in ((1, shapes_b8[0]), (3, shapes_b8[2])):
+        folded = autotune.get_plan(sb, vmem_budget=acfg.vmem_budget)
+        per_image = min(
+            (p for p in autotune.enumerate_plans(sb, acfg.vmem_budget)
+             if p.b_blk == 1), key=lambda p: p.t_model)
+        rows[f"batched_vs_per_image(alexnet_conv{li},b=8)"] = {
+            "per_image": {"plan": per_image.to_dict(),
+                          "t_model_us_per_image": per_image.t_model * 1e6},
+            "batched": {"plan": folded.to_dict(),
+                        "t_model_us_per_image": folded.t_model * 1e6},
+            "batched_no_slower": folded.t_model <= per_image.t_model,
+            "speedup": per_image.t_model / folded.t_model}
     return rows
+
+
+def check_against(path: str, rows: dict, *, tol: float = 0.10) -> list:
+    """Compare modelled layer rows against a committed trajectory.
+
+    Returns a list of regression strings — any ``*_model`` row whose
+    modelled roofline time grew more than ``tol`` vs the committed file.
+    New rows (no committed counterpart) and non-model rows are ignored.
+    """
+    with open(path) as f:
+        committed = json.load(f)
+    regressions = []
+    for name, row in rows.items():
+        if not name.endswith("_model"):
+            continue
+        old = committed.get(name)
+        if not isinstance(old, dict) or "us_per_call" not in old:
+            continue
+        was, now = old["us_per_call"], row["us_per_call"]
+        if now > was * (1 + tol):
+            regressions.append(
+                f"{name}: modelled {now:.1f}us vs committed {was:.1f}us "
+                f"(+{(now / was - 1) * 100:.1f}% > {tol * 100:.0f}%)")
+    return regressions
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip the slow full-scale VGG timing")
+    ap.add_argument("--check-against", metavar="PATH", default=None,
+                    help="perf-regression gate: fail if any modelled layer "
+                         "time regressed >10%% vs the trajectory at PATH")
     args, _ = ap.parse_known_args()
 
     sys.path.insert(0, "src")
@@ -127,9 +193,15 @@ def main() -> None:
     run("lm_roofline(assigned_archs)", lm_roofline.main)
 
     conv_rows = conv_bench(args.fast)
-    with open(BENCH_JSON, "w") as f:
-        json.dump(conv_rows, f, indent=1)
-    print(f"\nwrote {BENCH_JSON} ({len(conv_rows)} rows)")
+    # gate BEFORE writing: the committed file is the baseline, and a
+    # failing gate must NOT overwrite it (a rerun would then compare the
+    # regressed values against themselves and pass)
+    regressions = (check_against(args.check_against, conv_rows)
+                   if args.check_against else [])
+    if not regressions:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(conv_rows, f, indent=1)
+        print(f"\nwrote {BENCH_JSON} ({len(conv_rows)} rows)")
 
     print("\nname,us_per_call,derived")
     for name, us in csv_rows:
@@ -137,9 +209,18 @@ def main() -> None:
     for name, row in conv_rows.items():
         if "us_per_call" in row:
             p = row.get("plan")
-            derived = (f"plan=c{p['c_blk']}xm{p['m_blk']}xh{p['oh_blk']}"
-                       if p else "ref")
+            derived = (f"plan=b{p.get('b_blk', 1)}xc{p['c_blk']}"
+                       f"xm{p['m_blk']}xh{p['oh_blk']}" if p else "ref")
             print(f"{name},{row['us_per_call']:.0f},{derived}")
+
+    if args.check_against:
+        if regressions:
+            print(f"\nPERF REGRESSION vs {args.check_against}:")
+            for r in regressions:
+                print(f"  {r}")
+            sys.exit(1)
+        print(f"\nperf gate vs {args.check_against}: OK "
+              f"(no modelled layer regressed >10%)")
 
 
 if __name__ == "__main__":

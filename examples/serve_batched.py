@@ -1,13 +1,19 @@
 """END-TO-END DRIVER (the paper is an inference accelerator, so the
-e2e scenario is serving): batched request serving over the unified LM.
+e2e scenario is serving): batched request serving over the unified LM —
+or, for a CNN --arch, over the paper's own batch-pipelined CNN path.
 
 * batched prefill (PipeCNN's batched-FC weight reuse at serving scale),
 * per-step batched greedy decode with the KV/state cache,
 * per-phase token throughput report,
-* works for ANY --arch (transformer / MoE / SSM / hybrid smoke configs).
+* works for ANY --arch: transformer / MoE / SSM / hybrid smoke configs,
+  plus the CNN configs (alexnet, vgg16), which route through the
+  micro-batching queue of ``repro.launch.serve_cnn`` (requests padded to
+  the plan batch, batch-folded conv grid, batched-FC classifier).
 
 Run:  PYTHONPATH=src python examples/serve_batched.py --arch zamba2-1.2b \
           --batch 8 --prompt-len 64 --gen 32
+      PYTHONPATH=src python examples/serve_batched.py --arch alexnet \
+          --batch 8
 """
 import argparse
 import sys
@@ -19,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core.config import CNNConfig
 from repro.models import lm
 from repro.train.steps import serve_decode, serve_prefill
 
@@ -30,6 +37,29 @@ ap.add_argument("--gen", type=int, default=32)
 args = ap.parse_args()
 
 cfg = get_config(args.arch).smoke()
+
+if isinstance(cfg, CNNConfig):
+    # ---- CNN serving path: the batch-pipelined conv grid end to end ----
+    import dataclasses
+
+    from repro.launch.serve_cnn import (default_request_count,
+                                        latency_report, serve,
+                                        synthetic_requests)
+    from repro.models.cnn import init_cnn_params
+
+    cfg = dataclasses.replace(cfg, serve_batch=args.batch)
+    params = init_cnn_params(jax.random.key(0), cfg)
+    n_req = default_request_count(args.batch)
+    reqs = synthetic_requests(n_req, cfg.input_hw, cfg.input_ch, rate=200.0)
+    done = serve(cfg, params, reqs, batch=args.batch, use_pallas=True)
+    assert len(done) == n_req
+    rep = latency_report(done)
+    print(f"arch={args.arch} (CNN smoke scale, batch-folded conv grid)")
+    print(f"served {n_req} requests @ micro-batch {args.batch}: "
+          f"{rep['throughput']:.0f} img/s, p50 {rep['p50_ms']:.1f} ms, "
+          f"p95 {rep['p95_ms']:.1f} ms")
+    print("serve_batched OK")
+    sys.exit(0)
 if cfg.frontend:
     import dataclasses
     cfg = dataclasses.replace(cfg, frontend=None, frontend_len=0)

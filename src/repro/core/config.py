@@ -222,8 +222,13 @@ class CNNConfig:
     dtype: str = "float32"            # the paper implements full fp32
     # --- spatial tiling / DSE (the Fig. 7 sweep, per layer) ---
     oh_blk: int = 0                   # line-buffer depth in conv rows (0=full)
-    autotune: bool = True             # per-layer (c_blk,m_blk,oh_blk) DSE
+    autotune: bool = True             # per-layer (b,c,m,oh)_blk DSE
     vmem_budget: int = 16 * 2 ** 20   # per-core VMEM the tuner must fit
+    # --- batched serving (the paper's batch-64 FC mode, PR 2) ---
+    b_blk: int = 1                    # images per conv grid step when
+    #                                   autotune is off (manual fallback)
+    serve_batch: int = 64             # micro-batch the serving launcher
+    #                                   pads requests to (paper: batch 64)
 
     def smoke(self) -> "CNNConfig":
         """Shrink channel counts for CPU tests (same topology)."""

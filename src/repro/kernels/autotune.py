@@ -2,14 +2,19 @@
 
 The paper tunes its two throughput parameters (VEC_SIZE, CU_NUM) with an
 offline sweep against the DE5-net's DSP budget and DDR roofline (Fig. 7).
-This module is that sweep for the TPU kernel, with one more axis: the
-line-buffer depth ``oh_blk`` introduced by spatial tiling.
+This module is that sweep for the TPU kernel, with two more axes: the
+line-buffer depth ``oh_blk`` introduced by spatial tiling, and the
+images-per-grid-step ``b_blk`` introduced by batch folding (the serving
+path). ``b_blk`` trades VMEM (the x tile and accumulator scale with it)
+against weight-fetch amortization — the paper's batch-64 FC argument
+applied to conv: one weight tile DMA feeds ``b_blk`` images. All scores
+are per image, so plans tuned at different serve batches are comparable.
 
   * :func:`conv_vmem_bytes` — analytic VMEM working-set model of one
     ``conv_pipe`` grid step (the feasibility constraint; VMEM is the TPU's
     "DSP count").
-  * :func:`enumerate_plans` — all legal ``(c_blk, m_blk, oh_blk)`` points
-    under a VMEM budget.
+  * :func:`enumerate_plans` — all legal ``(b_blk, c_blk, m_blk, oh_blk)``
+    points under a VMEM budget.
   * :func:`score_plan` — roofline cost model (``core.roofline.time_bounds``):
     MXU-utilization-scaled compute vs. the DMA traffic the BlockSpec index
     maps actually generate (x is re-fetched once per M-tile, w once per
@@ -40,7 +45,12 @@ _DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}
 
 @dataclass(frozen=True)
 class ConvShape:
-    """Static signature of one conv(+pool) layer — the registry key."""
+    """Static signature of one conv(+pool) layer — the registry key.
+
+    ``b`` is the serving batch the layer is tuned FOR (part of the cache
+    key since PR 2: the best ``b_blk`` depends on it). ``b=1`` keeps the
+    per-image plans of PR 1.
+    """
     h: int
     w: int
     c: int                      # total input channels (all groups)
@@ -54,6 +64,7 @@ class ConvShape:
     pool_k: int = 2
     pool_s: int = 2
     dtype: str = "float32"
+    b: int = 1                  # serving batch (images per launch)
 
     @property
     def oh(self) -> int:
@@ -76,6 +87,7 @@ class ConvPlan:
     c_blk: int
     m_blk: int
     oh_blk: int
+    b_blk: int = 1              # images per grid step (batch folding)
     vmem_bytes: int = 0         # modelled working set (informational)
     t_model: float = 0.0        # modelled roofline time, seconds/image
 
@@ -84,47 +96,56 @@ class ConvPlan:
 
 
 def conv_vmem_bytes(shape: ConvShape, c_blk: int, m_blk: int,
-                    oh_blk: int) -> int:
+                    oh_blk: int, b_blk: int = 1) -> int:
     """VMEM working set of one grid step of the tiled conv_pipe kernel.
 
     Pipelined refs (x tile, w tile, bias, out tile) are double-buffered by
     Pallas (factor 2); the fp32 accumulator scratch is single-buffered.
+    The x tile, out tile and accumulator scale with ``b_blk`` (batch
+    folding keeps b_blk images of the H-tile resident); the weight tile
+    does not — that asymmetry is the whole point of batching.
     """
     dt = _DTYPE_BYTES.get(shape.dtype, 4)
     cg = shape.c // shape.groups
     mg = shape.m // shape.groups
     c_blk = min(c_blk, cg)
     m_blk = min(m_blk, mg)
+    b_blk = max(1, min(b_blk, shape.b))
     wp = shape.w + 2 * shape.pad
     _, pr, oh_ext, hp_blk, _ = conv_tile_geometry(
         shape.oh, oh_blk, stride=shape.stride, kh=shape.kh,
         pool=shape.pool, pool_k=shape.pool_k, pool_s=shape.pool_s)
     pw = ((shape.ow - shape.pool_k) // shape.pool_s + 1
           if shape.pool else shape.ow)
-    x_tile = hp_blk * wp * c_blk * dt
+    x_tile = b_blk * hp_blk * wp * c_blk * dt
     w_tile = shape.kh * shape.kw * c_blk * m_blk * dt
     b_tile = m_blk * dt
-    o_tile = pr * pw * m_blk * dt
-    acc = oh_ext * shape.ow * m_blk * 4
+    o_tile = b_blk * pr * pw * m_blk * dt
+    acc = b_blk * oh_ext * shape.ow * m_blk * 4
     return 2 * (x_tile + w_tile + b_tile + o_tile) + acc
 
 
 def score_plan(shape: ConvShape, c_blk: int, m_blk: int,
-               oh_blk: int) -> Tuple[float, float]:
-    """(t_compute, t_memory) roofline terms per image for one plan.
+               oh_blk: int, b_blk: int = 1) -> Tuple[float, float]:
+    """(t_compute, t_memory) roofline terms PER IMAGE for one plan.
 
     Models the traffic the BlockSpec index maps actually generate:
       x  — re-fetched for every M-tile; halo rows re-fetched per H-tile
-      w  — re-fetched for every H-tile (its map ignores the H axis)
+      w  — re-fetched for every (image-block, H-tile): batch folding
+           divides the per-image weight traffic by ``b_blk``
       out — written once
     Channel padding waste (Fig. 7's VEC_SIZE argument) shows up through
-    the padded c/m tile counts.
+    the padded c/m tile counts; batch padding waste (a trailing partial
+    image block computes zero images) through the padded image count.
     """
     dt = _DTYPE_BYTES.get(shape.dtype, 4)
     cg, mg = shape.c // shape.groups, shape.m // shape.groups
     c_blk, m_blk = min(c_blk, cg), min(m_blk, mg)
+    b_blk = max(1, min(b_blk, shape.b))
     cgp, mgp = _round_up(cg, c_blk), _round_up(mg, m_blk)
     n_c, n_m = cgp // c_blk, shape.groups * (mgp // m_blk)
+    n_b = -(-shape.b // b_blk)
+    bp = n_b * b_blk                       # padded image count
     wp = shape.w + 2 * shape.pad
     n_h, pr, oh_ext, hp_blk, _ = conv_tile_geometry(
         shape.oh, oh_blk, stride=shape.stride, kh=shape.kh,
@@ -132,14 +153,15 @@ def score_plan(shape: ConvShape, c_blk: int, m_blk: int,
     pw = ((shape.ow - shape.pool_k) // shape.pool_s + 1
           if shape.pool else shape.ow)
 
-    x_bytes = n_h * n_m * n_c * hp_blk * wp * c_blk * dt
-    w_bytes = n_h * n_m * n_c * shape.kh * shape.kw * c_blk * m_blk * dt
-    o_bytes = n_h * pr * pw * (n_m * m_blk) * dt
+    x_bytes = bp * n_h * n_m * n_c * hp_blk * wp * c_blk * dt
+    w_bytes = n_b * n_h * n_m * n_c * shape.kh * shape.kw * c_blk * m_blk * dt
+    o_bytes = bp * n_h * pr * pw * (n_m * m_blk) * dt
     # padded-lane compute: the kernel multiplies the padded tiles
-    flops = 2 * (n_h * pr if shape.pool is None else n_h * oh_ext) \
+    flops = 2 * bp * (n_h * pr if shape.pool is None else n_h * oh_ext) \
         * shape.ow * (n_m * m_blk) * shape.kh * shape.kw * cgp
-    return time_bounds(flops, x_bytes + w_bytes + o_bytes,
-                       mxu_util=mxu_utilization(c_blk, m_blk))
+    tc, tm = time_bounds(flops, x_bytes + w_bytes + o_bytes,
+                         mxu_util=mxu_utilization(c_blk, m_blk))
+    return tc / shape.b, tm / shape.b
 
 
 def _pow2_upto(limit: int, lo: int = 8) -> List[int]:
@@ -154,23 +176,31 @@ def _pow2_upto(limit: int, lo: int = 8) -> List[int]:
 
 def enumerate_plans(shape: ConvShape,
                     vmem_budget: int = VMEM_BYTES) -> List[ConvPlan]:
-    """All (c_blk, m_blk, oh_blk) points that fit the VMEM budget."""
+    """All (b_blk, c_blk, m_blk, oh_blk) points that fit the VMEM budget.
+
+    ``b_blk`` candidates are powers of two up to the serving batch
+    ``shape.b`` (plus the batch itself); for b=1 this degenerates to the
+    PR 1 three-axis sweep.
+    """
     cg, mg = shape.c // shape.groups, shape.m // shape.groups
     c_cands = sorted({min(v, cg) for v in _pow2_upto(min(cg, 2 * MXU_DIM))})
     m_cands = sorted({min(v, mg) for v in _pow2_upto(min(mg, 2 * MXU_DIM))})
     step = shape.pool_s if shape.pool else 1
     oh_cands = sorted({min(_round_up(v, step), _round_up(shape.oh, step))
                        for v in (1, 2, 4, 8, 16, 32, 64, shape.oh)})
+    b_cands = sorted({min(v, shape.b) for v in _pow2_upto(shape.b, lo=1)})
     plans = []
-    for cb in c_cands:
-        for mb in m_cands:
-            for ob in oh_cands:
-                vmem = conv_vmem_bytes(shape, cb, mb, ob)
-                if vmem > vmem_budget:
-                    continue
-                tc, tm = score_plan(shape, cb, mb, ob)
-                plans.append(ConvPlan(cb, mb, ob, vmem_bytes=vmem,
-                                      t_model=max(tc, tm)))
+    for bb in b_cands:
+        for cb in c_cands:
+            for mb in m_cands:
+                for ob in oh_cands:
+                    vmem = conv_vmem_bytes(shape, cb, mb, ob, bb)
+                    if vmem > vmem_budget:
+                        continue
+                    tc, tm = score_plan(shape, cb, mb, ob, bb)
+                    plans.append(ConvPlan(cb, mb, ob, b_blk=bb,
+                                          vmem_bytes=vmem,
+                                          t_model=max(tc, tm)))
     return plans
 
 
@@ -183,7 +213,8 @@ def best_plan(shape: ConvShape,
         raise ValueError(
             f"no feasible conv plan for {shape} under {vmem_budget} B VMEM")
     return min(plans, key=lambda p: (p.t_model,
-                                     -(p.c_blk * p.m_blk * p.oh_blk)))
+                                     -(p.b_blk * p.c_blk * p.m_blk
+                                       * p.oh_blk)))
 
 
 def measure_plan(shape: ConvShape, plan: ConvPlan, *, iters: int = 3,
@@ -198,7 +229,8 @@ def measure_plan(shape: ConvShape, plan: ConvPlan, *, iters: int = 3,
 
     dt = jnp.float32 if shape.dtype == "float32" else jnp.bfloat16
     key = jax.random.key(0)
-    x = jax.random.normal(key, (1, shape.h, shape.w, shape.c), jnp.float32)
+    x = jax.random.normal(key, (shape.b, shape.h, shape.w, shape.c),
+                          jnp.float32)
     w = jax.random.normal(key, (shape.kh, shape.kw,
                                 shape.c // shape.groups, shape.m),
                           jnp.float32) * 0.1
@@ -210,7 +242,8 @@ def measure_plan(shape: ConvShape, plan: ConvPlan, *, iters: int = 3,
                          pad=shape.pad, pool=shape.pool, pool_k=shape.pool_k,
                          pool_s=shape.pool_s, c_blk=plan.c_blk,
                          m_blk=plan.m_blk, oh_blk=plan.oh_blk,
-                         groups=shape.groups, interpret=interpret)
+                         b_blk=plan.b_blk, groups=shape.groups,
+                         interpret=interpret)
 
     run().block_until_ready()                 # compile / warm up
     t0 = time.perf_counter()
@@ -246,12 +279,16 @@ def plan_for_layer(x_shape: Tuple[int, ...], w_shape: Tuple[int, ...], *,
                    pool_s: int = 2, dtype: str = "float32",
                    vmem_budget: int = VMEM_BYTES,
                    backend: str = "tpu") -> ConvPlan:
-    """Convenience: build the ConvShape key from array shapes and tune."""
-    _, h, w, c = x_shape
+    """Convenience: build the ConvShape key from array shapes and tune.
+
+    The batch in ``x_shape`` becomes part of the key, so serving at a new
+    micro-batch retunes (and re-caches) the layer for that batch.
+    """
+    b, h, w, c = x_shape
     kh, kw, _, m = w_shape
     shape = ConvShape(h=h, w=w, c=c, kh=kh, kw=kw, m=m, stride=stride,
                       pad=pad, groups=groups, pool=pool, pool_k=pool_k,
-                      pool_s=pool_s, dtype=dtype)
+                      pool_s=pool_s, dtype=dtype, b=b)
     return get_plan(shape, vmem_budget=vmem_budget, backend=backend)
 
 

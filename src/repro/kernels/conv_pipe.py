@@ -12,10 +12,21 @@ inter-stage data never touches DDR. On TPU the same dataflow is one
   * bias + ReLU + line-buffer pooling run in the epilogue while the tile is
     still in VMEM (the Conv->Pool channel).
 
-Grid: ``(batch, H_tiles, M_tiles, C_tiles)`` with the input-channel axis
+Grid: ``(B_tiles * H_tiles, M_tiles, C_tiles)`` with the input-channel axis
 LAST and "arbitrary" semantics — the fp32 VMEM scratch accumulates partial
 sums across C-tiles (the paper's delayed-buffer accumulator; the MXU needs
 no II=2 shift register).
+
+Batch pipelining (the serving path): the batch axis is FOLDED into the
+leading grid axis rather than being its own axis — each grid step processes
+a ``b_blk``-image block of one H-tile, so a small-image batch streams
+through ONE ``pallas_call`` whose leading axis has ``ceil(B/b_blk) *
+H_tiles`` steps. ``b_blk > 1`` is the paper's batched-FC argument applied
+to conv: the weight tile fetched for a grid step amortizes over ``b_blk``
+images, and the im2col matmul's row dimension grows to ``b_blk * oh_ext *
+OW``, filling the MXU when single-image tiles would under-fill it. The x
+index map decomposes the folded axis (``bh // n_h`` selects the image
+block, ``bh % n_h`` the H-tile) so halo reads stay per-image.
 
 Spatial tiling (the FPGA line buffer): each grid step DMAs only the
 ``(oh_ext - 1) * stride + KH`` input rows its output-row tile needs. The
@@ -95,32 +106,36 @@ def _conv_pipe_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
                       stride: int, oh_ext: int, ow: int, relu: bool,
                       pool: Optional[str], pool_k: int, pool_s: int,
                       pr: int, n_c_tiles: int):
-    """One (batch, H-tile, M-tile) output block; accumulates over C-tiles."""
-    c_idx = pl.program_id(3)
+    """One (B-block, H-tile, M-tile) output block; accumulates over C-tiles."""
+    c_idx = pl.program_id(2)
 
     @pl.when(c_idx == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[0]                                   # (HP_BLK, WP, C_BLK)
+    x = x_ref[...]                                 # (B_BLK, HP_BLK, WP, C_BLK)
     w = w_ref[...]                                 # (KH, KW, C_BLK, M_BLK)
+    b_blk = x.shape[0]
     kh, kw = w.shape[0], w.shape[1]
     c_blk, m_blk = w.shape[2], w.shape[3]
 
-    # on-the-fly im2col: kh*kw strided slices, each a (OH_EXT*OW, C) x (C, M)
-    # matmul on the MXU, accumulated in fp32 VMEM scratch.
+    # on-the-fly im2col: kh*kw strided slices, each a
+    # (B_BLK*OH_EXT*OW, C) x (C, M) matmul on the MXU, accumulated in fp32
+    # VMEM scratch. The batch block rides in the row dimension, so one
+    # weight fetch feeds b_blk images (batched weight reuse).
     acc = acc_ref[...]
     for i in range(kh):
         for j in range(kw):
             patch = jax.lax.slice(
-                x, (i, j, 0),
-                (i + (oh_ext - 1) * stride + 1,
+                x, (0, i, j, 0),
+                (b_blk, i + (oh_ext - 1) * stride + 1,
                  j + (ow - 1) * stride + 1, c_blk),
-                (stride, stride, 1))               # (OH_EXT, OW, C_BLK)
+                (1, stride, stride, 1))            # (B_BLK, OH_EXT, OW, C_BLK)
             acc += jax.lax.dot_general(
-                patch.reshape(oh_ext * ow, c_blk), w[i, j],
+                patch.reshape(b_blk * oh_ext * ow, c_blk), w[i, j],
                 (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32).reshape(oh_ext, ow, m_blk)
+                preferred_element_type=jnp.float32
+                ).reshape(b_blk, oh_ext, ow, m_blk)
     acc_ref[...] = acc
 
     @pl.when(c_idx == n_c_tiles - 1)
@@ -137,10 +152,10 @@ def _conv_pipe_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
             for i in range(pool_k):
                 for j in range(pool_k):
                     sl = jax.lax.slice(
-                        y, (i, j, 0),
-                        (i + (pr - 1) * pool_s + 1,
+                        y, (0, i, j, 0),
+                        (b_blk, i + (pr - 1) * pool_s + 1,
                          j + (pwp - 1) * pool_s + 1, m_blk),
-                        (pool_s, pool_s, 1))
+                        (1, pool_s, pool_s, 1))
                     if win is None:
                         win = sl
                     elif pool == "max":
@@ -148,21 +163,23 @@ def _conv_pipe_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
                     else:
                         win = win + sl
             y = win / (pool_k * pool_k) if pool == "avg" else win
-        o_ref[0] = y.astype(o_ref.dtype)
+        o_ref[...] = y.astype(o_ref.dtype)
 
 
 def conv_pipe(x: jax.Array, w: jax.Array, b: jax.Array, *,
               stride: int = 1, pad: int = 0, relu: bool = True,
               pool: Optional[str] = None, pool_k: int = 2, pool_s: int = 2,
               c_blk: int = 8, m_blk: int = 32, oh_blk: int = 0,
-              groups: int = 1, interpret: bool = True) -> jax.Array:
+              b_blk: int = 1, groups: int = 1,
+              interpret: bool = True) -> jax.Array:
     """Fused conv(+bias)(+ReLU)(+pool). x (B,H,W,C); w (KH,KW,C/G,M); b (M,).
 
     c_blk/m_blk are the VEC_SIZE/CU_NUM analogues; oh_blk is the line-buffer
-    depth in conv-output rows (0 = full height, the seed behaviour).
-    ``groups`` runs grouped convolution inside the one kernel (w's channel
-    axis is per-group). interpret=True runs the kernel body on CPU (this
-    container); on TPU pass interpret=False.
+    depth in conv-output rows (0 = full height, the seed behaviour); b_blk
+    is the number of images per grid step (1 = per-image tiles, the PR 1
+    behaviour; 0 = whole batch). ``groups`` runs grouped convolution inside
+    the one kernel (w's channel axis is per-group). interpret=True runs the
+    kernel body on CPU (this container); on TPU pass interpret=False.
     """
     B, H, W, C = x.shape
     KH, KW, _, M = w.shape
@@ -206,6 +223,14 @@ def conv_pipe(x: jax.Array, w: jax.Array, b: jax.Array, *,
         OH, oh_blk, stride=stride, kh=KH,
         pool=pool, pool_k=pool_k, pool_s=pool_s)
 
+    # batch folding: b_blk images share each grid step (0 = whole batch);
+    # pad B up so the image-block axis tiles evenly (zero images, dropped)
+    b_blk = min(b_blk, B) if b_blk else B
+    b_blk = max(1, b_blk)
+    n_b = -(-B // b_blk)
+    if n_b * b_blk != B:
+        x = jnp.pad(x, ((0, n_b * b_blk - B), (0, 0), (0, 0), (0, 0)))
+
     # bottom-pad the input so the last tile's halo read stays in bounds
     # (its surplus conv rows are garbage-from-zeros, sliced off below)
     need_h = (n_h - 1) * row_step + hp_blk
@@ -216,24 +241,26 @@ def conv_pipe(x: jax.Array, w: jax.Array, b: jax.Array, *,
         _conv_pipe_kernel, stride=stride, oh_ext=oh_ext, ow=OW, relu=relu,
         pool=pool, pool_k=pool_k, pool_s=pool_s, pr=pr, n_c_tiles=n_c)
 
-    # x tiles overlap by the halo rows => element-offset (unblocked) indexing;
-    # the group of M-tile mi selects the input-channel slab.
+    # x tiles overlap by the halo rows => element-offset (unblocked)
+    # indexing; the folded leading axis decomposes into (image block,
+    # H-tile); the group of M-tile mi selects the input-channel slab.
     x_spec = pl.BlockSpec(
-        (1, hp_blk, W, c_blk),
-        lambda bi, hi, mi, ci: (bi, hi * row_step, 0,
-                                (mi // n_mg) * cgp + ci * c_blk),
+        (b_blk, hp_blk, W, c_blk),
+        lambda bh, mi, ci: ((bh // n_h) * b_blk, (bh % n_h) * row_step, 0,
+                            (mi // n_mg) * cgp + ci * c_blk),
         indexing_mode=pl.Unblocked())
     in_specs = [
         x_spec,
         pl.BlockSpec((KH, KW, c_blk, m_blk),
-                     lambda bi, hi, mi, ci: (0, 0, ci, mi)),
-        pl.BlockSpec((m_blk,), lambda bi, hi, mi, ci: (mi,)),
+                     lambda bh, mi, ci: (0, 0, ci, mi)),
+        pl.BlockSpec((m_blk,), lambda bh, mi, ci: (mi,)),
     ]
-    out_spec = pl.BlockSpec((1, pr, pw, m_blk),
-                            lambda bi, hi, mi, ci: (bi, hi, 0, mi))
-    out_shape = jax.ShapeDtypeStruct((B, n_h * pr, pw, groups * mgp), x.dtype)
+    out_spec = pl.BlockSpec((b_blk, pr, pw, m_blk),
+                            lambda bh, mi, ci: (bh // n_h, bh % n_h, 0, mi))
+    out_shape = jax.ShapeDtypeStruct(
+        (n_b * b_blk, n_h * pr, pw, groups * mgp), x.dtype)
 
-    acc_shape = (oh_ext, OW, m_blk)
+    acc_shape = (b_blk, oh_ext, OW, m_blk)
     if pltpu is not None:
         outs = out_shape
         out_specs = out_spec
@@ -245,12 +272,13 @@ def conv_pipe(x: jax.Array, w: jax.Array, b: jax.Array, *,
         # memory-space annotation. The dummy output is dropped below.
         outs = [out_shape, jax.ShapeDtypeStruct(acc_shape, jnp.float32)]
         out_specs = [out_spec,
-                     pl.BlockSpec(acc_shape, lambda bi, hi, mi, ci: (0, 0, 0))]
+                     pl.BlockSpec(acc_shape,
+                                  lambda bh, mi, ci: (0, 0, 0, 0))]
         scratch = []
 
     out = pl.pallas_call(
         kernel,
-        grid=(B, n_h, n_m, n_c),
+        grid=(n_b * n_h, n_m, n_c),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=outs,
@@ -259,7 +287,7 @@ def conv_pipe(x: jax.Array, w: jax.Array, b: jax.Array, *,
     )(x, w, b)
     if pltpu is None:
         out = out[0]
-    out = out[:, :ph]
+    out = out[:B, :ph]
     if mgp != mg:
         out = out.reshape(B, ph, pw, groups, mgp)[..., :m_orig]
         out = out.reshape(B, ph, pw, groups * m_orig)

@@ -29,23 +29,24 @@ def set_interpret(flag: bool) -> None:
 
 @functools.partial(jax.jit, static_argnames=(
     "stride", "pad", "relu", "pool", "pool_k", "pool_s", "use_pallas",
-    "c_blk", "m_blk", "oh_blk", "groups", "plan"))
+    "c_blk", "m_blk", "oh_blk", "b_blk", "groups", "plan"))
 def fused_conv(x, w, b, *, stride=1, pad=0, relu=True, pool=None,
                pool_k=2, pool_s=2, use_pallas=False, c_blk=8, m_blk=32,
-               oh_blk=0, groups=1, plan=None):
-    """Fused conv(+bias)(+ReLU)(+pool), grouped-conv aware.
+               oh_blk=0, b_blk=1, groups=1, plan=None):
+    """Fused conv(+bias)(+ReLU)(+pool), grouped-conv and batch-fold aware.
 
     ``plan`` (a frozen :class:`repro.kernels.autotune.ConvPlan`) overrides
-    the c_blk/m_blk/oh_blk knobs with an autotuned point; being hashable it
-    rides through jit as a static argument.
+    the c_blk/m_blk/oh_blk/b_blk knobs with an autotuned point; being
+    hashable it rides through jit as a static argument.
     """
     if plan is not None:
         c_blk, m_blk, oh_blk = plan.c_blk, plan.m_blk, plan.oh_blk
+        b_blk = plan.b_blk
     if use_pallas:
         return conv_pipe(x, w, b, stride=stride, pad=pad, relu=relu,
                          pool=pool, pool_k=pool_k, pool_s=pool_s,
                          c_blk=c_blk, m_blk=m_blk, oh_blk=oh_blk,
-                         groups=groups, interpret=_INTERPRET)
+                         b_blk=b_blk, groups=groups, interpret=_INTERPRET)
     return ref.conv_pipe_ref(x, w, b, stride=stride, pad=pad, relu=relu,
                              pool=pool, pool_k=pool_k, pool_s=pool_s,
                              groups=groups)

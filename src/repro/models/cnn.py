@@ -88,10 +88,12 @@ def cnn_forward(params, x: jax.Array, cfg: CNNConfig, *,
                       pool_k=(pool.kernel if pool else 2),
                       pool_s=(pool.stride if pool else 2),
                       use_pallas=use_pallas, c_blk=c_blk, m_blk=m_blk,
-                      oh_blk=cfg.oh_blk, groups=l.groups)
+                      oh_blk=cfg.oh_blk, b_blk=cfg.b_blk, groups=l.groups)
             if use_pallas and cfg.autotune:
                 # per-layer DSE: replace the global VEC_SIZE/CU_NUM point
-                # with the tuned (c_blk, m_blk, oh_blk) plan for this shape
+                # with the tuned (b_blk, c_blk, m_blk, oh_blk) plan for
+                # this shape — the batch in x.shape is part of the key, so
+                # the serving path retunes per micro-batch size
                 kw["plan"] = plan_for_layer(
                     x.shape, p["w"].shape, stride=l.stride, pad=l.pad,
                     groups=l.groups, pool=kw["pool"], pool_k=kw["pool_k"],
@@ -108,7 +110,11 @@ def cnn_forward(params, x: jax.Array, cfg: CNNConfig, *,
         elif l.kind == "fc":
             B = x.shape[0]
             x = x.reshape(B, -1)
+            # batched-FC weight reuse (paper §IV batch-64 mode): bm covers
+            # the whole micro-batch so each weight tile fetched from HBM is
+            # applied to every image before the next tile streams in
             x = ops.fc(x, p["w"], p["b"], relu=l.relu, use_pallas=use_pallas,
+                       bm=max(128, cfg.serve_batch),
                        bk=128 * max(1, cfg.vec_size // 8),
                        bn=128 * max(1, cfg.cu_num // 8))
     return x
