@@ -220,6 +220,12 @@ class CNNConfig:
     cu_num: int = 16
     use_lrn: bool = False
     dtype: str = "float32"            # the paper implements full fp32
+    # fixed-point serving (the paper's precision/resource trade, PR 3):
+    # "none" = fp32; "int8" = calibrated symmetric int8 pipeline (int8
+    # conv/FC kernels with int32 accumulation + requantize epilogues).
+    # "int8" declares the model must be served from QuantizedCNNParams —
+    # cnn_forward raises if handed raw fp32 params (calibrate first).
+    quant: str = "none"
     # --- spatial tiling / DSE (the Fig. 7 sweep, per layer) ---
     oh_blk: int = 0                   # line-buffer depth in conv rows (0=full)
     autotune: bool = True             # per-layer (b,c,m,oh)_blk DSE

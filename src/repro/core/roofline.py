@@ -20,10 +20,21 @@ from typing import Dict, Optional
 
 # --- TPU v5e hardware constants (per chip) ---
 PEAK_FLOPS = 197e12          # bf16
+PEAK_OPS_INT8 = 394e12       # int8 MACs run at 2x the bf16 MXU rate
 HBM_BW = 819e9               # bytes/s
 ICI_BW = 50e9                # bytes/s per link
 VMEM_BYTES = 16 * 2 ** 20    # per-core VMEM (the TPU's "DSP budget")
 MXU_DIM = 128                # systolic array dimension
+
+
+def peak_ops(dtype: str = "bfloat16") -> float:
+    """Peak MXU op rate for a compute dtype.
+
+    int8 is the only dtype with a distinct rate in this model (2x bf16 —
+    the TPU analogue of PipeCNN's fixed-point DSP saving); fp32 is kept
+    at PEAK_FLOPS so pre-quantization trajectories stay comparable.
+    """
+    return PEAK_OPS_INT8 if dtype == "int8" else PEAK_FLOPS
 
 
 def cost_analysis_dict(compiled) -> dict:
@@ -46,14 +57,20 @@ def mxu_utilization(c_blk: int, m_blk: int) -> float:
 
 
 def time_bounds(flops: float, hbm_bytes: float, *,
-                mxu_util: float = 1.0) -> "tuple[float, float]":
+                mxu_util: float = 1.0,
+                dtype: str = "bfloat16") -> "tuple[float, float]":
     """(t_compute, t_memory) roofline terms for one kernel invocation.
 
     This is the per-kernel cost model the conv DSE autotuner scores plans
     with (kernels/autotune.py) — the same two terms as the whole-model
-    roofline above, restricted to a single pallas_call.
+    roofline above, restricted to a single pallas_call. ``dtype`` is the
+    COMPUTE dtype: int8 doubles the peak op rate (the operand byte
+    counts are the caller's job — they shrink 4x vs fp32, which is what
+    moves the roofline balance point and makes the tuner pick genuinely
+    different int8 plans).
     """
-    return flops / (PEAK_FLOPS * max(mxu_util, 1e-9)), hbm_bytes / HBM_BW
+    return (flops / (peak_ops(dtype) * max(mxu_util, 1e-9)),
+            hbm_bytes / HBM_BW)
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

@@ -100,12 +100,16 @@ def conv_vmem_bytes(shape: ConvShape, c_blk: int, m_blk: int,
     """VMEM working set of one grid step of the tiled conv_pipe kernel.
 
     Pipelined refs (x tile, w tile, bias, out tile) are double-buffered by
-    Pallas (factor 2); the fp32 accumulator scratch is single-buffered.
+    Pallas (factor 2); the accumulator scratch is single-buffered and
+    always 4 bytes/element (fp32, or int32 in the fixed-point pipeline).
     The x tile, out tile and accumulator scale with ``b_blk`` (batch
     folding keeps b_blk images of the H-tile resident); the weight tile
-    does not — that asymmetry is the whole point of batching.
+    does not — that asymmetry is the whole point of batching. int8
+    shrinks the streamed tiles 4x (1-byte tensors) but adds the fp32
+    requantize-scale tile (rides like the bias), and bias/scale stay fp32.
     """
     dt = _DTYPE_BYTES.get(shape.dtype, 4)
+    quantized = shape.dtype == "int8"
     cg = shape.c // shape.groups
     mg = shape.m // shape.groups
     c_blk = min(c_blk, cg)
@@ -119,10 +123,11 @@ def conv_vmem_bytes(shape: ConvShape, c_blk: int, m_blk: int,
           if shape.pool else shape.ow)
     x_tile = b_blk * hp_blk * wp * c_blk * dt
     w_tile = shape.kh * shape.kw * c_blk * m_blk * dt
-    b_tile = m_blk * dt
+    b_tile = m_blk * (4 if quantized else dt)      # int8 keeps fp32 bias
+    s_tile = m_blk * 4 if quantized else 0   # requantize multiplier (fp32)
     o_tile = b_blk * pr * pw * m_blk * dt
-    acc = b_blk * oh_ext * shape.ow * m_blk * 4
-    return 2 * (x_tile + w_tile + b_tile + o_tile) + acc
+    acc = b_blk * oh_ext * shape.ow * m_blk * 4    # fp32 / int32 scratch
+    return 2 * (x_tile + w_tile + b_tile + s_tile + o_tile) + acc
 
 
 def score_plan(shape: ConvShape, c_blk: int, m_blk: int,
@@ -137,6 +142,12 @@ def score_plan(shape: ConvShape, c_blk: int, m_blk: int,
     Channel padding waste (Fig. 7's VEC_SIZE argument) shows up through
     the padded c/m tile counts; batch padding waste (a trailing partial
     image block computes zero images) through the padded image count.
+
+    Dtype-aware (the paper's fixed-point trade, modeled): int8 shrinks
+    every streamed byte 4x vs fp32 AND doubles the MXU op rate
+    (``roofline.peak_ops``), so bandwidth-bound layers model at <= 1/4
+    and compute-bound layers at 1/2 — the tuner consequently picks
+    different (b,c,m,oh)_blk points for int8 than for fp32.
     """
     dt = _DTYPE_BYTES.get(shape.dtype, 4)
     cg, mg = shape.c // shape.groups, shape.m // shape.groups
@@ -160,7 +171,8 @@ def score_plan(shape: ConvShape, c_blk: int, m_blk: int,
     flops = 2 * bp * (n_h * pr if shape.pool is None else n_h * oh_ext) \
         * shape.ow * (n_m * m_blk) * shape.kh * shape.kw * cgp
     tc, tm = time_bounds(flops, x_bytes + w_bytes + o_bytes,
-                         mxu_util=mxu_utilization(c_blk, m_blk))
+                         mxu_util=mxu_utilization(c_blk, m_blk),
+                         dtype=shape.dtype)
     return tc / shape.b, tm / shape.b
 
 
@@ -227,7 +239,6 @@ def measure_plan(shape: ConvShape, plan: ConvPlan, *, iters: int = 3,
 
     from repro.kernels.conv_pipe import conv_pipe
 
-    dt = jnp.float32 if shape.dtype == "float32" else jnp.bfloat16
     key = jax.random.key(0)
     x = jax.random.normal(key, (shape.b, shape.h, shape.w, shape.c),
                           jnp.float32)
@@ -235,15 +246,28 @@ def measure_plan(shape: ConvShape, plan: ConvPlan, *, iters: int = 3,
                                 shape.c // shape.groups, shape.m),
                           jnp.float32) * 0.1
     b = jnp.zeros((shape.m,))
-    args = [a.astype(dt) for a in (x, w, b)]
+    qkw = {}
+    if shape.dtype == "int8":
+        # measure the kernel the plan was tuned for: int8 operands plus a
+        # requantize scale, not a float stand-in (the VMEM feasibility was
+        # modeled at 1 byte/element)
+        from repro.quant.core import (abs_max_scale, quantize,
+                                      quantize_channelwise)
+        sx = float(abs_max_scale(x))
+        w, ws = quantize_channelwise(w, axis=-1)
+        x = quantize(x, sx)
+        qkw = dict(scale=ws * sx, out_scale=0.05)
+    else:
+        dt = jnp.float32 if shape.dtype == "float32" else jnp.bfloat16
+        x, w, b = x.astype(dt), w.astype(dt), b.astype(dt)
 
     def run():
-        return conv_pipe(args[0], args[1], args[2], stride=shape.stride,
+        return conv_pipe(x, w, b, stride=shape.stride,
                          pad=shape.pad, pool=shape.pool, pool_k=shape.pool_k,
                          pool_s=shape.pool_s, c_blk=plan.c_blk,
                          m_blk=plan.m_blk, oh_blk=plan.oh_blk,
                          b_blk=plan.b_blk, groups=shape.groups,
-                         interpret=interpret)
+                         interpret=interpret, **qkw)
 
     run().block_until_ready()                 # compile / warm up
     t0 = time.perf_counter()

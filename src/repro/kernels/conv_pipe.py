@@ -42,6 +42,14 @@ M-tile axis spans all groups' output tiles and the x index map offsets the
 input-channel window into the owning group's channel slab — one
 ``pallas_call``, no per-group Python loop, no activation concatenate.
 
+Fixed-point mode (the paper's headline resource trade): pass int8 ``x``/``w``
+with a per-output-channel ``scale`` vector (= s_x * s_w[m]) and the kernel
+runs the PipeCNN fixed-point pipeline — int8 tiles DMA'd (4x less HBM
+traffic than fp32), int32 MXU accumulation, and a fused requantize ->
+bias -> ReLU -> pool epilogue. A static ``out_scale`` requantizes the
+result to int8 for the next layer (calibrated offline); ``out_scale=None``
+emits fp32 (the classifier's logits).
+
 Block-size knobs map to the paper's throughput parameters:
   C_BLK  <-> VEC_SIZE     (input-feature vectorization)
   M_BLK  <-> CU_NUM       (parallel output-feature CUs)
@@ -102,11 +110,20 @@ def conv_tile_geometry(oh: int, oh_blk: int, *, stride: int, kh: int,
     return n_h, pr, oh_ext, hp_blk, row_step
 
 
-def _conv_pipe_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
-                      stride: int, oh_ext: int, ow: int, relu: bool,
-                      pool: Optional[str], pool_k: int, pool_s: int,
-                      pr: int, n_c_tiles: int):
-    """One (B-block, H-tile, M-tile) output block; accumulates over C-tiles."""
+def _conv_pipe_kernel(x_ref, w_ref, b_ref, *refs, stride: int, oh_ext: int,
+                      ow: int, relu: bool, pool: Optional[str], pool_k: int,
+                      pool_s: int, pr: int, n_c_tiles: int,
+                      quantized: bool = False,
+                      out_scale: Optional[float] = None):
+    """One (B-block, H-tile, M-tile) output block; accumulates over C-tiles.
+
+    ``quantized`` inserts the per-channel scale ref after the bias and
+    switches the accumulator to int32 (the fixed-point pipeline); the
+    epilogue then requantizes (scale -> bias -> ReLU -> pool -> round).
+    """
+    if quantized:
+        s_ref, refs = refs[0], refs[1:]
+    o_ref, acc_ref = refs
     c_idx = pl.program_id(2)
 
     @pl.when(c_idx == 0)
@@ -118,11 +135,14 @@ def _conv_pipe_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
     b_blk = x.shape[0]
     kh, kw = w.shape[0], w.shape[1]
     c_blk, m_blk = w.shape[2], w.shape[3]
+    acc_t = jnp.int32 if quantized else jnp.float32
 
     # on-the-fly im2col: kh*kw strided slices, each a
-    # (B_BLK*OH_EXT*OW, C) x (C, M) matmul on the MXU, accumulated in fp32
-    # VMEM scratch. The batch block rides in the row dimension, so one
-    # weight fetch feeds b_blk images (batched weight reuse).
+    # (B_BLK*OH_EXT*OW, C) x (C, M) matmul on the MXU, accumulated in
+    # VMEM scratch (fp32, or exact int32 in fixed-point mode — int8
+    # products can't overflow 32 bits at any supported layer size). The
+    # batch block rides in the row dimension, so one weight fetch feeds
+    # b_blk images (batched weight reuse).
     acc = acc_ref[...]
     for i in range(kh):
         for j in range(kw):
@@ -134,13 +154,18 @@ def _conv_pipe_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
             acc += jax.lax.dot_general(
                 patch.reshape(b_blk * oh_ext * ow, c_blk), w[i, j],
                 (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32
+                preferred_element_type=acc_t
                 ).reshape(b_blk, oh_ext, ow, m_blk)
     acc_ref[...] = acc
 
     @pl.when(c_idx == n_c_tiles - 1)
     def _epilogue():
-        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        y = acc_ref[...].astype(jnp.float32)
+        if quantized:
+            # requantize: int32 accumulator x (s_x * s_w[m]), THEN bias —
+            # bias stays fp32 so it needs no per-channel rescaling
+            y = y * s_ref[...].astype(jnp.float32)
+        y = y + b_ref[...].astype(jnp.float32)
         if relu:
             y = jnp.maximum(y, 0.0)
         if pool is not None:
@@ -163,10 +188,16 @@ def _conv_pipe_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
                     else:
                         win = win + sl
             y = win / (pool_k * pool_k) if pool == "avg" else win
+        if quantized and out_scale is not None:
+            # emit int8 for the next layer: same round-half-even/clip as
+            # quant.core.quantize, so kernel and reference are bit-equal
+            y = jnp.clip(jnp.round(y / out_scale), -127, 127)
         o_ref[...] = y.astype(o_ref.dtype)
 
 
 def conv_pipe(x: jax.Array, w: jax.Array, b: jax.Array, *,
+              scale: Optional[jax.Array] = None,
+              out_scale: Optional[float] = None,
               stride: int = 1, pad: int = 0, relu: bool = True,
               pool: Optional[str] = None, pool_k: int = 2, pool_s: int = 2,
               c_blk: int = 8, m_blk: int = 32, oh_blk: int = 0,
@@ -180,8 +211,16 @@ def conv_pipe(x: jax.Array, w: jax.Array, b: jax.Array, *,
     behaviour; 0 = whole batch). ``groups`` runs grouped convolution inside
     the one kernel (w's channel axis is per-group). interpret=True runs the
     kernel body on CPU (this container); on TPU pass interpret=False.
+
+    Fixed-point mode: ``scale`` (fp32, (M,), = s_x * s_w per output channel)
+    switches to the int8 pipeline — x/w must be int8, accumulation is
+    int32, and the epilogue requantizes. ``out_scale`` (a static python
+    float) selects int8 output quantized by that step; None emits fp32.
+    Zero padding (halo / channel / batch) is exact because the scheme is
+    symmetric (zero-point 0).
     """
     B, H, W, C = x.shape
+    quantized = scale is not None
     KH, KW, _, M = w.shape
     if C % groups or M % groups:
         raise ValueError(f"groups={groups} must divide C={C} and M={M}")
@@ -214,6 +253,9 @@ def conv_pipe(x: jax.Array, w: jax.Array, b: jax.Array, *,
                     ((0, 0),) * 3 + ((0, 0), (0, mgp - mg))
                     ).reshape(KH, KW, cgp, groups * mgp)
         b = jnp.pad(b.reshape(groups, mg), ((0, 0), (0, mgp - mg))).reshape(-1)
+        if quantized:   # scale pads alongside bias (padded lanes: 0 * 0)
+            scale = jnp.pad(scale.reshape(groups, mg),
+                            ((0, 0), (0, mgp - mg))).reshape(-1)
     else:
         w = w.reshape(KH, KW, cgp, groups * mgp)
     n_c, n_mg = cgp // c_blk, mgp // m_blk
@@ -239,7 +281,8 @@ def conv_pipe(x: jax.Array, w: jax.Array, b: jax.Array, *,
 
     kernel = functools.partial(
         _conv_pipe_kernel, stride=stride, oh_ext=oh_ext, ow=OW, relu=relu,
-        pool=pool, pool_k=pool_k, pool_s=pool_s, pr=pr, n_c_tiles=n_c)
+        pool=pool, pool_k=pool_k, pool_s=pool_s, pr=pr, n_c_tiles=n_c,
+        quantized=quantized, out_scale=out_scale)
 
     # x tiles overlap by the halo rows => element-offset (unblocked)
     # indexing; the folded leading axis decomposes into (image block,
@@ -255,22 +298,32 @@ def conv_pipe(x: jax.Array, w: jax.Array, b: jax.Array, *,
                      lambda bh, mi, ci: (0, 0, ci, mi)),
         pl.BlockSpec((m_blk,), lambda bh, mi, ci: (mi,)),
     ]
+    args = (x, w, b)
+    if quantized:
+        # the requantize multiplier tiles exactly like the bias
+        in_specs.append(pl.BlockSpec((m_blk,), lambda bh, mi, ci: (mi,)))
+        args = args + (scale.astype(jnp.float32),)
     out_spec = pl.BlockSpec((b_blk, pr, pw, m_blk),
                             lambda bh, mi, ci: (bh // n_h, bh % n_h, 0, mi))
+    if quantized:
+        out_dtype = jnp.int8 if out_scale is not None else jnp.float32
+    else:
+        out_dtype = x.dtype
     out_shape = jax.ShapeDtypeStruct(
-        (n_b * b_blk, n_h * pr, pw, groups * mgp), x.dtype)
+        (n_b * b_blk, n_h * pr, pw, groups * mgp), out_dtype)
 
     acc_shape = (b_blk, oh_ext, OW, m_blk)
+    acc_dtype = jnp.int32 if quantized else jnp.float32
     if pltpu is not None:
         outs = out_shape
         out_specs = out_spec
-        scratch = [pltpu.VMEM(acc_shape, jnp.float32)]
+        scratch = [pltpu.VMEM(acc_shape, acc_dtype)]
     else:
         # No TPU plugin: express the accumulator as a second output whose
         # index map pins every grid step to the same block — Pallas keeps a
         # revisited block resident, giving scratch semantics without any
         # memory-space annotation. The dummy output is dropped below.
-        outs = [out_shape, jax.ShapeDtypeStruct(acc_shape, jnp.float32)]
+        outs = [out_shape, jax.ShapeDtypeStruct(acc_shape, acc_dtype)]
         out_specs = [out_spec,
                      pl.BlockSpec(acc_shape,
                                   lambda bh, mi, ci: (0, 0, 0, 0))]
@@ -284,7 +337,7 @@ def conv_pipe(x: jax.Array, w: jax.Array, b: jax.Array, *,
         out_shape=outs,
         scratch_shapes=scratch,
         interpret=interpret,
-    )(x, w, b)
+    )(*args)
     if pltpu is None:
         out = out[0]
     out = out[:B, :ph]

@@ -11,10 +11,17 @@ weight tile resident in VMEM).
 
 fp32 VMEM scratch accumulates across K-tiles (grid k-axis last, arbitrary
 semantics); bias + ReLU fuse into the epilogue.
+
+Fixed-point mode (the classifier side of the int8 pipeline): int8 x/w
+tiles, int32 accumulation, and the same fused requantize -> bias -> ReLU
+epilogue as the conv kernel — ``scale`` is the per-output-feature
+s_x * s_w[n] multiplier, ``out_scale`` (static) requantizes hidden-FC
+outputs to int8 for the next layer (None keeps fp32 logits).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +33,12 @@ except Exception:  # pragma: no cover
     pltpu = None
 
 
-def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int,
-                   relu: bool):
+def _matmul_kernel(x_ref, w_ref, b_ref, *refs, n_k: int, relu: bool,
+                   quantized: bool = False,
+                   out_scale: Optional[float] = None):
+    if quantized:
+        s_ref, refs = refs[0], refs[1:]
+    o_ref, acc_ref = refs
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
@@ -36,24 +47,38 @@ def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int,
 
     acc_ref[...] += jax.lax.dot_general(
         x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        preferred_element_type=jnp.int32 if quantized else jnp.float32)
 
     @pl.when(k_idx == n_k - 1)
     def _epilogue():
-        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        y = acc_ref[...].astype(jnp.float32)
+        if quantized:
+            y = y * s_ref[...].astype(jnp.float32)
+        y = y + b_ref[...].astype(jnp.float32)
         if relu:
             y = jnp.maximum(y, 0.0)
+        if quantized and out_scale is not None:
+            # same round/clip as quant.core.quantize (bit-exact parity)
+            y = jnp.clip(jnp.round(y / out_scale), -127, 127)
         o_ref[...] = y.astype(o_ref.dtype)
 
 
 def matmul_pipe(x: jax.Array, w: jax.Array, b: jax.Array = None, *,
+                scale: Optional[jax.Array] = None,
+                out_scale: Optional[float] = None,
                 relu: bool = False, bm: int = 128, bn: int = 128,
                 bk: int = 128, interpret: bool = True) -> jax.Array:
-    """y = relu(x @ w + b). x (M, K); w (K, N); b (N,)."""
+    """y = relu(x @ w + b). x (M, K); w (K, N); b (N,).
+
+    ``scale`` ((N,) fp32) selects the int8 path: x/w int8, int32
+    accumulation, requantize epilogue; ``out_scale`` (static float) emits
+    int8 instead of fp32.
+    """
     M, K = x.shape
     _, N = w.shape
+    quantized = scale is not None
     if b is None:
-        b = jnp.zeros((N,), x.dtype)
+        b = jnp.zeros((N,), jnp.float32 if quantized else x.dtype)
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
 
     def padto(a, axis, blk):
@@ -70,18 +95,29 @@ def matmul_pipe(x: jax.Array, w: jax.Array, b: jax.Array = None, *,
     Np = wp.shape[1]
     grid = (Mp // bm, Np // bn, Kp // bk)
 
-    kern = functools.partial(_matmul_kernel, n_k=grid[2], relu=relu)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+        pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+        pl.BlockSpec((bn,), lambda mi, ni, ki: (ni,)),
+    ]
+    args = (xp, wp, bp)
+    if quantized:
+        in_specs.append(pl.BlockSpec((bn,), lambda mi, ni, ki: (ni,)))
+        args = args + (padto(scale.astype(jnp.float32), 0, bn),)
+        out_dtype = jnp.int8 if out_scale is not None else jnp.float32
+    else:
+        out_dtype = x.dtype
+
+    kern = functools.partial(_matmul_kernel, n_k=grid[2], relu=relu,
+                             quantized=quantized, out_scale=out_scale)
     out = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
-            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
-            pl.BlockSpec((bn,), lambda mi, ni, ki: (ni,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM(
+            (bm, bn), jnp.int32 if quantized else jnp.float32)],
         interpret=interpret,
-    )(xp, wp, bp)
+    )(*args)
     return out[:M, :N]

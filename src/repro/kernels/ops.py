@@ -18,6 +18,7 @@ from repro.kernels.conv_pipe import conv_pipe
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.lrn_pwl import lrn_pwl
 from repro.kernels.matmul_pipe import matmul_pipe
+from repro.quant import ref as quant_ref
 
 _INTERPRET = True          # flipped to False by launch scripts on real TPU
 
@@ -52,6 +53,36 @@ def fused_conv(x, w, b, *, stride=1, pad=0, relu=True, pool=None,
                              groups=groups)
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "stride", "pad", "relu", "pool", "pool_k", "pool_s", "use_pallas",
+    "c_blk", "m_blk", "oh_blk", "b_blk", "groups", "plan", "out_scale"))
+def fused_conv_q(x_q, w_q, b, scale, *, stride=1, pad=0, relu=True,
+                 pool=None, pool_k=2, pool_s=2, use_pallas=False, c_blk=8,
+                 m_blk=32, oh_blk=0, b_blk=1, groups=1, plan=None,
+                 out_scale=None):
+    """int8 fused conv: the fixed-point twin of :func:`fused_conv`.
+
+    x_q/w_q int8; b fp32; ``scale`` the (M,) combined s_x*s_w requantize
+    multiplier; ``out_scale`` (static float) quantizes the output for the
+    next layer, None emits fp32. The non-pallas path is the EXACT int32
+    reference (``quant.ref.conv_int8_ref``) — parity tests assert
+    bit-equality between the two.
+    """
+    if plan is not None:
+        c_blk, m_blk, oh_blk = plan.c_blk, plan.m_blk, plan.oh_blk
+        b_blk = plan.b_blk
+    if use_pallas:
+        return conv_pipe(x_q, w_q, b, scale=scale, out_scale=out_scale,
+                         stride=stride, pad=pad, relu=relu, pool=pool,
+                         pool_k=pool_k, pool_s=pool_s, c_blk=c_blk,
+                         m_blk=m_blk, oh_blk=oh_blk, b_blk=b_blk,
+                         groups=groups, interpret=_INTERPRET)
+    return quant_ref.conv_int8_ref(x_q, w_q, b, scale, stride=stride,
+                                   pad=pad, relu=relu, pool=pool,
+                                   pool_k=pool_k, pool_s=pool_s,
+                                   groups=groups, out_scale=out_scale)
+
+
 @functools.partial(jax.jit, static_argnames=("use_pallas", "exact"))
 def lrn(x, *, use_pallas=False, exact=False):
     if exact or not use_pallas:
@@ -69,6 +100,21 @@ def fc(x, w, b=None, *, relu=False, use_pallas=False,
         return matmul_pipe(x, w, b, relu=relu, bm=bm, bn=bn, bk=bk,
                            interpret=_INTERPRET)
     return ref.matmul_pipe_ref(x, w, b, relu=relu)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "use_pallas", "bm",
+                                             "bn", "bk", "out_scale"))
+def fc_q(x_q, w_q, b, scale, *, relu=False, use_pallas=False,
+         bm=128, bn=128, bk=128, out_scale=None):
+    """int8 batched-FC: int8 x/w, int32 accumulation, requantize epilogue.
+
+    The non-pallas path is the exact int32 reference (bit-equal parity)."""
+    if use_pallas:
+        return matmul_pipe(x_q, w_q, b, scale=scale, out_scale=out_scale,
+                           relu=relu, bm=bm, bn=bn, bk=bk,
+                           interpret=_INTERPRET)
+    return quant_ref.fc_int8_ref(x_q, w_q, b, scale, relu=relu,
+                                 out_scale=out_scale)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "bq", "bk"))

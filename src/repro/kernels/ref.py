@@ -30,10 +30,21 @@ def conv_pipe_ref(x, w, b, *, stride=1, pad=0, relu=True, pool=None,
 
 
 def pool_ref(x, pool="max", k=2, s=2):
-    init = -jnp.inf if pool == "max" else 0.0
-    red = jax.lax.max if pool == "max" else jax.lax.add
-    out = jax.lax.reduce_window(x, init, red, (1, k, k, 1), (1, s, s, 1),
-                                "VALID")
+    """Pooling oracle; int dtypes supported for max (the int8 pipeline
+    max-pools directly on codes — max commutes with the monotone
+    quantization map, so the scale passes through unchanged)."""
+    integer = jnp.issubdtype(x.dtype, jnp.integer)
+    if pool == "max":
+        init = jnp.iinfo(x.dtype).min if integer else -jnp.inf
+        red = jax.lax.max
+    else:
+        if integer:
+            raise NotImplementedError(
+                "avg-pool on integer codes needs a requantize; "
+                "dequantize first")
+        init, red = 0.0, jax.lax.add
+    out = jax.lax.reduce_window(x, jnp.asarray(init, x.dtype), red,
+                                (1, k, k, 1), (1, s, s, 1), "VALID")
     return out / (k * k) if pool == "avg" else out
 
 

@@ -16,11 +16,16 @@ top:
     reported as p50/p95 alongside throughput;
   * the batched-FC weight-reuse mode for the classifier layers
     (``CNNConfig.serve_batch`` sizes the GEMM row block to the
-    micro-batch).
+    micro-batch);
+  * fixed-point serving (``--quant int8``, PR 3): the paper's
+    precision/resource trade — weights are quantized per-channel, a
+    synthetic calibration set fixes the activation scales offline, and
+    the whole micro-batch streams through the int8 kernels (int8 tiles,
+    int32 accumulation, fused requantize epilogues).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_cnn --arch alexnet --smoke \
-      --batch 8 --requests 16
+      --batch 8 --requests 16 [--quant int8]
 """
 from __future__ import annotations
 
@@ -181,6 +186,11 @@ def main() -> None:
     ap.add_argument("--no-pallas", action="store_true",
                     help="serve through the XLA reference path instead of "
                          "the fused Pallas pipeline")
+    ap.add_argument("--quant", choices=("none", "int8"), default="none",
+                    help="serve in fixed-point: calibrate on a synthetic "
+                         "batch, then run the int8 kernel pipeline")
+    ap.add_argument("--calib", type=int, default=8,
+                    help="calibration images for --quant int8")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -191,7 +201,7 @@ def main() -> None:
         cfg = cfg.smoke()
     # the micro-batch IS the batched-FC block: classifier weight tiles
     # amortize over exactly the images the queue hands us
-    cfg = dataclasses.replace(cfg, serve_batch=args.batch)
+    cfg = dataclasses.replace(cfg, serve_batch=args.batch, quant=args.quant)
     n_req = args.requests or default_request_count(args.batch)
 
     key = jax.random.key(0)
@@ -199,6 +209,22 @@ def main() -> None:
     requests = synthetic_requests(n_req, cfg.input_hw, cfg.input_ch,
                                   args.rate)
     use_pallas = not args.no_pallas
+
+    if args.quant == "int8":
+        # offline calibration (the PipeCNN step that fixes the fixed-point
+        # positions): a synthetic batch from the serving distribution
+        from repro.quant import calibrate_cnn
+        rng = np.random.default_rng(123)
+        calib = jnp.asarray(rng.standard_normal(
+            (args.calib, cfg.input_hw, cfg.input_hw, cfg.input_ch)
+            ).astype(np.float32))
+        params = calibrate_cnn(params, calib, cfg)
+        n_conv = sum(1 for l in params.layers
+                     if l is not None and l.kind == "conv")
+        print(f"[serve_cnn] int8 calibration: {args.calib} images, "
+              f"{n_conv} conv layers quantized (per-channel weights, "
+              f"per-tensor activations); input scale "
+              f"{params.in_scale:.3g}")
 
     done = serve(cfg, params, requests, batch=args.batch,
                  use_pallas=use_pallas)
@@ -208,18 +234,22 @@ def main() -> None:
 
     print(f"[serve_cnn] {args.arch}{' (smoke)' if args.smoke else ''}: "
           f"{n_req} requests @ micro-batch {args.batch} "
-          f"({'pallas' if use_pallas else 'xla-ref'} path)")
+          f"({'pallas' if use_pallas else 'xla-ref'} path"
+          f"{', int8' if args.quant == 'int8' else ''})")
     print(f"[serve_cnn] throughput {rep['throughput']:.1f} img/s "
           f"({gops:.2f} GOPS); latency p50 {rep['p50_ms']:.1f} ms, "
           f"p95 {rep['p95_ms']:.1f} ms")
     if use_pallas and cfg.autotune:
+        dtype = "int8" if args.quant == "int8" else cfg.dtype
         rows = [r for r in autotune.registry_snapshot()
-                if r["shape"]["b"] == args.batch]
+                if r["shape"]["b"] == args.batch
+                and r["shape"]["dtype"] == dtype]
         picked = sorted({(r["plan"]["b_blk"], r["plan"]["c_blk"],
                           r["plan"]["m_blk"], r["plan"]["oh_blk"])
                          for r in rows})
         print(f"[serve_cnn] {len(rows)} conv layers tuned at batch "
-              f"{args.batch}; (b,c,m,oh)_blk points in use: {picked}")
+              f"{args.batch} ({dtype} plans); (b,c,m,oh)_blk points in "
+              f"use: {picked}")
     print("[serve_cnn] OK")
 
 

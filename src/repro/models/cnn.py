@@ -5,6 +5,14 @@ consecutive conv(+relu)+pool pairs run as ONE fused kernel (the paper's
 Conv->Pool channel), LRN runs as its own kernel off the pipeline (the paper
 implements LRN separately because of its multi-map access pattern), and FC
 layers run through the multi-mode engine in batched-FC mode.
+
+Fixed-point serving (the paper's precision trade): hand ``cnn_forward`` a
+``repro.quant.QuantizedCNNParams`` (from ``calibrate_cnn``) and the same
+stage grouping executes in int8 — int8 activations flow between stages,
+conv/FC kernels accumulate in int32 and requantize in their epilogues,
+standalone max-pools run directly on the int8 codes, and LRN (the one
+genuinely nonlinear-in-scale stage) dequantizes around its kernel exactly
+as PipeCNN runs LRN off the fixed-point pipeline.
 """
 from __future__ import annotations
 
@@ -72,33 +80,67 @@ def fuse_plan(cfg: CNNConfig) -> List[Tuple[int, ...]]:
     return plan
 
 
+def _conv_group_kwargs(cfg: CNNConfig, l: ConvLayer, pool, *,
+                       use_pallas: bool) -> Dict[str, Any]:
+    """The per-conv-group knob dict SHARED by the fp32 and int8 paths —
+    one definition so tiling/plan selection can never diverge between the
+    two (the accuracy harness compares them layer for layer)."""
+    return dict(stride=l.stride, pad=l.pad, relu=l.relu,
+                pool=(pool.pool if pool else None),
+                pool_k=(pool.kernel if pool else 2),
+                pool_s=(pool.stride if pool else 2),
+                use_pallas=use_pallas, c_blk=cfg.vec_size,
+                m_blk=max(8, cfg.cu_num), oh_blk=cfg.oh_blk,
+                b_blk=cfg.b_blk, groups=l.groups)
+
+
+def _conv_group_plan(cfg: CNNConfig, l: ConvLayer, kw: Dict[str, Any],
+                     x_shape, w_shape, dtype: str):
+    """Per-layer DSE lookup: replace the global VEC_SIZE/CU_NUM point with
+    the tuned (b,c,m,oh)_blk plan for this shape. The batch in x_shape and
+    the compute dtype are both part of the cache key, so the serving path
+    retunes per micro-batch size and int8 gets its own plans."""
+    return plan_for_layer(
+        x_shape, w_shape, stride=l.stride, pad=l.pad, groups=l.groups,
+        pool=kw["pool"], pool_k=kw["pool_k"], pool_s=kw["pool_s"],
+        dtype=dtype, vmem_budget=cfg.vmem_budget)
+
+
+def _fc_block_kwargs(cfg: CNNConfig) -> Dict[str, int]:
+    """Batched-FC GEMM blocks (paper §IV batch-64 mode), shared by both
+    paths: bm covers the whole micro-batch so each weight tile fetched
+    from HBM is applied to every image before the next tile streams in."""
+    return dict(bm=max(128, cfg.serve_batch),
+                bk=128 * max(1, cfg.vec_size // 8),
+                bn=128 * max(1, cfg.cu_num // 8))
+
+
 def cnn_forward(params, x: jax.Array, cfg: CNNConfig, *,
                 use_pallas: bool = False, fused: bool = True) -> jax.Array:
-    """x (B, H, W, C) -> logits (B, n_classes)."""
+    """x (B, H, W, C) -> logits (B, n_classes).
+
+    Quantize-then-forward: a ``QuantizedCNNParams`` routes to the int8
+    pipeline (``cnn_forward_quant``); a plain param list runs fp32/bf16.
+    ``cfg.quant="int8"`` declares the model SHOULD be served fixed-point,
+    so handing it raw fp32 params is an error (calibrate first).
+    """
+    from repro.quant.calibrate import QuantizedCNNParams  # local: no cycle
+    if isinstance(params, QuantizedCNNParams):
+        return cnn_forward_quant(params, x, cfg, use_pallas=use_pallas)
+    if cfg.quant == "int8":
+        raise ValueError(
+            "cfg.quant='int8' but params are not QuantizedCNNParams; "
+            "run repro.quant.calibrate_cnn(params, calib_batch, cfg) first")
     plan = fuse_plan(cfg) if fused else [(i,) for i in range(len(cfg.layers))]
-    c_blk = cfg.vec_size
-    m_blk = max(8, cfg.cu_num)
     for group in plan:
         l = cfg.layers[group[0]]
         p = params[group[0]]
         if l.kind == "conv":
             pool = cfg.layers[group[1]] if len(group) == 2 else None
-            kw = dict(stride=l.stride, pad=l.pad, relu=l.relu,
-                      pool=(pool.pool if pool else None),
-                      pool_k=(pool.kernel if pool else 2),
-                      pool_s=(pool.stride if pool else 2),
-                      use_pallas=use_pallas, c_blk=c_blk, m_blk=m_blk,
-                      oh_blk=cfg.oh_blk, b_blk=cfg.b_blk, groups=l.groups)
+            kw = _conv_group_kwargs(cfg, l, pool, use_pallas=use_pallas)
             if use_pallas and cfg.autotune:
-                # per-layer DSE: replace the global VEC_SIZE/CU_NUM point
-                # with the tuned (b_blk, c_blk, m_blk, oh_blk) plan for
-                # this shape — the batch in x.shape is part of the key, so
-                # the serving path retunes per micro-batch size
-                kw["plan"] = plan_for_layer(
-                    x.shape, p["w"].shape, stride=l.stride, pad=l.pad,
-                    groups=l.groups, pool=kw["pool"], pool_k=kw["pool_k"],
-                    pool_s=kw["pool_s"], dtype=cfg.dtype,
-                    vmem_budget=cfg.vmem_budget)
+                kw["plan"] = _conv_group_plan(cfg, l, kw, x.shape,
+                                              p["w"].shape, cfg.dtype)
             # grouped conv (AlexNet two-tower) runs INSIDE the one kernel:
             # the M-tile grid axis spans groups, no concat on the hot path
             x = ops.fused_conv(x, p["w"], p["b"], **kw)
@@ -109,15 +151,73 @@ def cnn_forward(params, x: jax.Array, cfg: CNNConfig, *,
             x = ops.lrn(x, use_pallas=use_pallas)
         elif l.kind == "fc":
             B = x.shape[0]
-            x = x.reshape(B, -1)
-            # batched-FC weight reuse (paper §IV batch-64 mode): bm covers
-            # the whole micro-batch so each weight tile fetched from HBM is
-            # applied to every image before the next tile streams in
-            x = ops.fc(x, p["w"], p["b"], relu=l.relu, use_pallas=use_pallas,
-                       bm=max(128, cfg.serve_batch),
-                       bk=128 * max(1, cfg.vec_size // 8),
-                       bn=128 * max(1, cfg.cu_num // 8))
+            x = ops.fc(x.reshape(B, -1), p["w"], p["b"], relu=l.relu,
+                       use_pallas=use_pallas, **_fc_block_kwargs(cfg))
     return x
+
+
+def _quant_groups(qp, x: jax.Array, cfg: CNNConfig, *,
+                  use_pallas: bool = False):
+    """Run the int8 pipeline one fusion group at a time.
+
+    Yields ``(group, activation, scale)`` after every group — activation
+    is int8 codes with quantization step ``scale``, except the final
+    classifier group which emits fp32 logits with ``scale=None``. The
+    accuracy harness consumes the intermediates; ``cnn_forward_quant``
+    keeps only the last.
+    """
+    from repro.kernels.ref import pool_ref
+    from repro.quant.core import dequantize, quantize
+
+    plan = fuse_plan(cfg)
+    q = quantize(x, qp.in_scale)
+    s = qp.in_scale
+    for group in plan:
+        l = cfg.layers[group[0]]
+        ql = qp.layers[group[0]]
+        if l.kind == "conv":
+            pool = cfg.layers[group[1]] if len(group) == 2 else None
+            kw = _conv_group_kwargs(cfg, l, pool, use_pallas=use_pallas)
+            if use_pallas and cfg.autotune:
+                # dtype rides in the plan-cache key: int8 tiles are 4x
+                # smaller, so the tuner picks different (b,c,m,oh)_blk
+                # points than the fp32 plans for the same layer
+                kw["plan"] = _conv_group_plan(cfg, l, kw, q.shape,
+                                              ql.w_q.shape, "int8")
+            q = ops.fused_conv_q(q, ql.w_q, ql.b, ql.scale,
+                                 out_scale=ql.y_scale, **kw)
+            s = ql.y_scale
+        elif l.kind == "pool":
+            # max-pool commutes with the int8 map: pool the codes, keep s
+            q = pool_ref(q, l.pool, l.kernel, l.stride)
+        elif l.kind == "lrn":
+            # LRN is nonlinear in scale — run it off the fixed-point
+            # pipeline (as PipeCNN does) and requantize its output
+            xf = ops.lrn(dequantize(q, ql.x_scale), use_pallas=use_pallas)
+            q = quantize(xf, ql.y_scale)
+            s = ql.y_scale
+        elif l.kind == "fc":
+            B = q.shape[0]
+            q = ops.fc_q(q.reshape(B, -1), ql.w_q, ql.b, ql.scale,
+                         relu=l.relu, use_pallas=use_pallas,
+                         out_scale=ql.y_scale, **_fc_block_kwargs(cfg))
+            s = ql.y_scale
+        yield group, q, s
+
+
+def cnn_forward_quant(qp, x: jax.Array, cfg: CNNConfig, *,
+                      use_pallas: bool = False) -> jax.Array:
+    """int8 pipeline forward: x (B, H, W, C) fp32 -> fp32 logits.
+
+    ``qp`` is a :class:`repro.quant.QuantizedCNNParams` from
+    ``calibrate_cnn``. The input is quantized once at the network edge;
+    every inter-stage tensor is int8 until the final classifier, whose
+    ``y_scale=None`` keeps the logits fp32.
+    """
+    out = None
+    for _, out, _ in _quant_groups(qp, x, cfg, use_pallas=use_pallas):
+        pass
+    return out
 
 
 def classification_flops(cfg: CNNConfig) -> int:

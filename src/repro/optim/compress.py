@@ -11,6 +11,10 @@ happens on the DEQUANTIZED values (XLA collectives don't accept int8 reduce
 on all backends) but the *payload crossing the pod axis* is what the
 compressed size models; `compressed_bytes` feeds the roofline's collective
 term. Exactness is traded per `BLOCK`-granular scales.
+
+The quantize/dequantize math itself lives in ``repro.quant.core``
+(``quantize_blocks`` / ``dequantize_blocks``) — one symmetric-int8
+codepath repo-wide, shared with the int8 inference subsystem.
 """
 from __future__ import annotations
 
@@ -18,6 +22,8 @@ from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.quant.core import dequantize_blocks, quantize_blocks
 
 BLOCK = 2048
 
@@ -32,22 +38,11 @@ def init_compression(grads_like) -> CompressionState:
 
 
 def _quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    flat = g.reshape(-1)
-    pad = (-flat.shape[0]) % BLOCK
-    flat = jnp.pad(flat, (0, pad))
-    blocks = flat.reshape(-1, BLOCK)
-    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
-    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)),
-                 -127, 127).astype(jnp.int8)
-    return q, scale
+    return quantize_blocks(g, BLOCK)
 
 
 def _dequantize(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
-    flat = (q.astype(jnp.float32) * scale).reshape(-1)
-    n = 1
-    for d in shape:
-        n *= d
-    return flat[:n].reshape(shape)
+    return dequantize_blocks(q, scale, shape)
 
 
 def compress_grads(grads, state: CompressionState

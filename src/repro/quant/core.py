@@ -1,0 +1,109 @@
+"""Symmetric int8 quantization primitives — the ONE quantization codepath.
+
+PipeCNN's headline resource win (34% fewer DSP blocks at 33.9 GOPS) comes
+from running the pipeline in fixed-point rather than fp32; this module is
+the TPU-repro analogue's numeric core. Everything quantization-shaped in
+the repo routes through here:
+
+  * the int8 inference subsystem (``repro.quant.calibrate`` /
+    ``repro.quant.ref`` / the int8 paths of ``conv_pipe`` and
+    ``matmul_pipe``) uses :func:`quantize` / :func:`dequantize` /
+    :func:`abs_max_scale`;
+  * the gradient-compression all-reduce (``repro.optim.compress``) uses
+    the block-granular :func:`quantize_blocks` / :func:`dequantize_blocks`
+    built on the same primitives.
+
+Scheme: symmetric (zero-point 0), round-to-nearest-even, clip to
+[-127, 127] (the -128 code is unused so negation is exact). Symmetry is
+what lets the conv kernel zero-pad halos/channels/batches without a
+zero-point correction term: padded int8 zeros contribute exactly zero to
+the int32 accumulator.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127                      # int8 symmetric range [-127, 127]
+_EPS = 1e-12                    # guards all-zero tensors (scale stays finite)
+
+
+def abs_max_scale(x: jax.Array, axis=None, *, keepdims: bool = False
+                  ) -> jax.Array:
+    """scale = max|x| / 127 over ``axis`` (None = per-tensor).
+
+    ``axis=(0, 1, 2)`` on an HWIO conv weight gives the per-output-channel
+    scales the int8 conv path uses.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
+                   keepdims=keepdims)
+    return jnp.maximum(amax, _EPS) / QMAX
+
+
+def quantize(x: jax.Array, scale) -> jax.Array:
+    """x -> int8 codes: clip(round(x / scale), -127, 127).
+
+    ``scale`` broadcasts (scalar for per-tensor, a trailing-axis vector for
+    per-channel). This exact formula — divide, round-half-even, clip — is
+    also what the Pallas kernels' requantize epilogues apply, so kernel and
+    reference quantization are bit-identical.
+    """
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale) -> jax.Array:
+    """int8 codes -> fp32: q * scale (broadcasting like :func:`quantize`)."""
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x: jax.Array, scale) -> jax.Array:
+    """Quantize-dequantize in fp32 — the QAT-style reference transform.
+
+    ``fake_quant(x, s)`` is the value the int8 pipeline *represents* for
+    x; running the fp32 math on fake-quantized tensors models quantization
+    error without any int8 storage (the accuracy-harness reference path).
+    """
+    return dequantize(quantize(x, scale), scale)
+
+
+def quantize_channelwise(w: jax.Array, axis: int = -1
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Per-channel symmetric int8 weights: (w_q, scales) with one scale per
+    slice of ``axis`` (the output-feature axis for conv HWIO / fc KN)."""
+    axis = axis % w.ndim
+    red = tuple(a for a in range(w.ndim) if a != axis)
+    scale = abs_max_scale(w, axis=red, keepdims=True)
+    wq = quantize(w, scale)
+    return wq, scale.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# block-granular variants (the gradient-compression payload format)
+# ---------------------------------------------------------------------------
+
+def quantize_blocks(x: jax.Array, block: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Flatten to (n_blocks, block) and quantize with one scale per block.
+
+    Zero-pads the tail block; returns ``(q (n_blocks, block) int8,
+    scale (n_blocks, 1) fp32)``. This is the payload format the pod-level
+    compressed all-reduce models (``optim.compress``).
+    """
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = abs_max_scale(blocks, axis=1, keepdims=True)
+    return quantize(blocks, scale), scale
+
+
+def dequantize_blocks(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    """Inverse of :func:`quantize_blocks` (drops the tail padding)."""
+    flat = dequantize(q, scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)

@@ -1,0 +1,68 @@
+"""Calibration observers: range statistics -> activation scales.
+
+The int8 pipeline needs one scale per activation-tensor boundary (layer
+inputs and requantize targets). Observers accumulate range statistics over
+a calibration stream and emit the scale; they are deterministic — the
+same calibration batches in the same order always produce the same scales
+(a test pins this, because the plan cache and the serving path both key
+on the quantized config).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.core import QMAX, _EPS
+
+
+class AbsMaxObserver:
+    """Running max|x| over every ``update``; ``scale = amax / 127``.
+
+    The PipeCNN-style static calibration: fixed-point positions are chosen
+    offline from a calibration set and frozen for serving. Statistics are
+    held as python floats (not traced values) so the resulting scales ride
+    through ``jax.jit`` as compile-time constants — requantize multipliers
+    bake into the kernel epilogues.
+    """
+
+    def __init__(self) -> None:
+        self.amax = 0.0
+        self.n_updates = 0
+
+    def update(self, x) -> None:
+        self.amax = max(self.amax, float(jnp.max(jnp.abs(x))))
+        self.n_updates += 1
+
+    def scale(self) -> float:
+        if self.n_updates == 0:
+            raise ValueError("observer saw no calibration data")
+        return max(self.amax, _EPS) / QMAX
+
+
+class MovingAverageAbsMaxObserver(AbsMaxObserver):
+    """EMA of per-batch abs-max — robust to a single outlier batch.
+
+    ``momentum=0`` degenerates to "last batch wins"; the default 0.9 is
+    the standard PTQ setting. Still deterministic: the EMA is a pure
+    function of the batch sequence.
+    """
+
+    def __init__(self, momentum: float = 0.9) -> None:
+        super().__init__()
+        self.momentum = momentum
+
+    def update(self, x) -> None:
+        batch_amax = float(jnp.max(jnp.abs(x)))
+        if self.n_updates == 0:
+            self.amax = batch_amax
+        else:
+            self.amax = (self.momentum * self.amax
+                         + (1.0 - self.momentum) * batch_amax)
+        self.n_updates += 1
+
+
+def make_observer(kind: str = "absmax") -> AbsMaxObserver:
+    if kind == "absmax":
+        return AbsMaxObserver()
+    if kind == "ema":
+        return MovingAverageAbsMaxObserver()
+    raise ValueError(f"unknown observer kind {kind!r}")

@@ -1,0 +1,96 @@
+"""Reference execution paths for the int8 pipeline (the ground truth).
+
+Two references, used differently by the tests and the accuracy harness:
+
+  * :func:`conv_int8_ref` / :func:`fc_int8_ref` — EXACT integer math:
+    int8 operands, int32 accumulation via XLA's integer conv/dot, then the
+    same requantize -> bias -> ReLU -> pool epilogue the Pallas kernels
+    fuse. Because the accumulator is exact (no float summation-order
+    slack), the Pallas int8 kernels must match these BIT-FOR-BIT in
+    interpret mode — the parity tests assert exact equality, not
+    allclose.
+  * :func:`conv_fake_quant_ref` — fp32 math on fake-quantized operands
+    (quantize-dequantize, ``core.fake_quant``). This is the QAT-style
+    model of what the int8 pipeline computes, used by the accuracy
+    harness to separate calibration error from kernel error.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import pool_ref
+from repro.quant.core import fake_quant, quantize
+
+
+def _epilogue(acc_f32, b, *, relu, pool, pool_k, pool_s,
+              out_scale: Optional[float]):
+    """The shared requantize -> bias -> ReLU -> pool tail (fp32 in,
+    int8 or fp32 out) — one definition so kernel tests can't drift."""
+    y = acc_f32 + b.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    if pool is not None:
+        y = pool_ref(y, pool, pool_k, pool_s)
+    if out_scale is not None:
+        return quantize(y, out_scale)
+    return y
+
+
+def conv_int8_ref(x_q: jax.Array, w_q: jax.Array, b: jax.Array,
+                  scale: jax.Array, *, stride: int = 1, pad: int = 0,
+                  relu: bool = True, pool: Optional[str] = None,
+                  pool_k: int = 2, pool_s: int = 2, groups: int = 1,
+                  out_scale: Optional[float] = None) -> jax.Array:
+    """Exact-int oracle for the int8 conv_pipe path.
+
+    x_q (B,H,W,C) int8; w_q (KH,KW,C/G,M) int8; b (M,) fp32 bias;
+    scale (M,) fp32 = s_x * s_w[m] (the combined requantize multiplier).
+    Returns int8 (requantized by ``out_scale``) or fp32 (out_scale=None).
+    """
+    acc = jax.lax.conv_general_dilated(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+        (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups, preferred_element_type=jnp.int32)
+    return _epilogue(acc.astype(jnp.float32) * scale, b, relu=relu,
+                     pool=pool, pool_k=pool_k, pool_s=pool_s,
+                     out_scale=out_scale)
+
+
+def fc_int8_ref(x_q: jax.Array, w_q: jax.Array, b: jax.Array,
+                scale: jax.Array, *, relu: bool = False,
+                out_scale: Optional[float] = None) -> jax.Array:
+    """Exact-int oracle for the int8 matmul_pipe (batched-FC) path.
+
+    x_q (M,K) int8; w_q (K,N) int8; b/scale (N,) fp32.
+    """
+    acc = jax.lax.dot_general(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    return _epilogue(acc.astype(jnp.float32) * scale, b, relu=relu,
+                     pool=None, pool_k=2, pool_s=2, out_scale=out_scale)
+
+
+def conv_fake_quant_ref(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                        x_scale, w_scale, stride: int = 1, pad: int = 0,
+                        relu: bool = True, pool: Optional[str] = None,
+                        pool_k: int = 2, pool_s: int = 2, groups: int = 1,
+                        out_scale: Optional[float] = None) -> jax.Array:
+    """fp32 conv on fake-quantized operands (the QAT-style reference).
+
+    Differs from :func:`conv_int8_ref` only by float accumulation order;
+    the accuracy harness uses it to bound calibration-induced error
+    independent of any kernel.
+    """
+    xf = fake_quant(x, x_scale)
+    wf = fake_quant(w, w_scale.reshape((1,) * (w.ndim - 1) + (-1,)))
+    acc = jax.lax.conv_general_dilated(
+        xf, wf, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    y = _epilogue(acc, b, relu=relu, pool=pool, pool_k=pool_k,
+                  pool_s=pool_s, out_scale=None)
+    return fake_quant(y, out_scale) if out_scale is not None else y
