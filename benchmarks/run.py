@@ -165,6 +165,96 @@ def conv_bench(fast: bool) -> dict:
     return rows
 
 
+def fc_gemm_shapes(cfg, b: int = 8) -> list:
+    """GemmShape per FC layer of a CNNConfig at serving batch ``b``
+    (boundary shapes come from the stage planner's one shape walk)."""
+    from repro.kernels import autotune
+    from repro.serve.stage_planner import group_io_shapes
+
+    out = []
+    for group, in_shape, out_shape in group_io_shapes(cfg):
+        if cfg.layers[group[0]].kind == "fc":
+            k = 1
+            for d in in_shape:
+                k *= d
+            out.append(autotune.GemmShape(m=b, k=k, n=out_shape[-1],
+                                          dtype=cfg.dtype))
+    return out
+
+
+def fleet_bench(fast: bool) -> dict:
+    """Distributed-serving trajectory rows (PR 4).
+
+    * ``{arch}_fc{i}_gemm_model`` — the dtype-aware GEMM DSE plan per
+      classifier layer (fp32 and int8), closing the ROADMAP item "int8
+      FC plans are untuned";
+    * ``{arch}_fleet_{single,dp4,pp4}_model`` — modeled per-image
+      service time of the serving engine in each mode, from a
+      deterministic discrete-event simulation (modeled clock, no
+      devices needed);
+    * ``fleet_vs_single(alexnet)`` — the PR acceptance row: 4
+      data-parallel replicas must achieve >= 3x aggregate modeled
+      throughput vs the single-replica baseline (enforced by main()).
+    """
+    import dataclasses as _dc
+
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.kernels import autotune
+    from repro.serve import Request, ServeEngine
+
+    rows: dict = {}
+    BATCH, N_REQ = 8, 96
+
+    def sim(cfg, replicas, pp_stages):
+        # execute=False: pure discrete-event simulation over the roofline
+        # cost model — image payloads are never computed, so keep them tiny
+        reqs = [Request(rid=i, image=np.zeros((1, 1, 1), np.float32),
+                        t_arrival=0.0) for i in range(N_REQ)]
+        eng = ServeEngine(cfg, [], batch=BATCH, replicas=replicas,
+                          pp_stages=pp_stages, clock="modeled",
+                          execute=False)
+        _, rep = eng.serve(reqs)
+        return eng, rep
+
+    for name in ("alexnet",) if fast else ("alexnet", "vgg16"):
+        cfg = get_config(name)
+        for fc_i, (shape, q_shape) in enumerate(zip(
+                fc_gemm_shapes(cfg),
+                fc_gemm_shapes(_dc.replace(cfg, dtype="int8"))), start=1):
+            p = autotune.get_gemm_plan(shape, vmem_budget=cfg.vmem_budget)
+            rows[f"{name}_fc{fc_i}_gemm_model"] = {
+                "us_per_call": p.t_model * 1e6, "plan": p.to_dict()}
+            q = autotune.get_gemm_plan(q_shape, vmem_budget=cfg.vmem_budget)
+            rows[f"{name}_fc{fc_i}_int8_gemm_model"] = {
+                "us_per_call": q.t_model * 1e6, "plan": q.to_dict()}
+
+        fleet = {}
+        for mode, (r, s) in (("single", (1, 1)), ("dp4", (4, 1)),
+                             ("pp4", (1, 4))):
+            eng, rep = sim(cfg, r, s)
+            fleet[mode] = rep
+            rows[f"{name}_fleet_{mode}_model"] = {
+                "us_per_call": 1e6 / rep.throughput,
+                "fleet": {"mode": rep.mode, "replicas": r, "pp_stages": s,
+                          "batch": BATCH, "n_micro": eng.n_micro,
+                          "throughput_img_s": rep.throughput,
+                          "p95_ms": rep.p95_ms}}
+        rows[f"fleet_vs_single({name})"] = {
+            "single_img_s": fleet["single"].throughput,
+            "dp4_img_s": fleet["dp4"].throughput,
+            "pp4_img_s": fleet["pp4"].throughput,
+            "dp4_speedup": fleet["dp4"].throughput
+            / fleet["single"].throughput,
+            "pp4_speedup": fleet["pp4"].throughput
+            / fleet["single"].throughput,
+            "ge_3x_dp4": fleet["dp4"].throughput
+            >= 3.0 * fleet["single"].throughput,
+            "batch": BATCH, "n_requests": N_REQ}
+    return rows
+
+
 def check_against(path: str, rows: dict, *, tol: float = 0.10) -> tuple:
     """Compare modelled layer rows against a committed trajectory.
 
@@ -228,6 +318,7 @@ def main() -> None:
     run("lm_roofline(assigned_archs)", lm_roofline.main)
 
     conv_rows = conv_bench(args.fast)
+    conv_rows.update(fleet_bench(args.fast))
     # the int8 acceptance invariant is deterministic (pure cost model),
     # so it is enforced on EVERY run, gate or not: int8 must model
     # <= 0.5x fp32 on every bandwidth-bound conv layer
@@ -239,6 +330,13 @@ def main() -> None:
         for name, row in conv_rows.items()
         if name.startswith("int8_vs_fp32(")
         and not row["int8_le_half_on_bandwidth_bound"]]
+    # likewise the fleet acceptance (PR 4): 4 data-parallel replicas
+    # must model >= 3x aggregate throughput vs one replica
+    violations += [
+        f"{name}: dp4 modelled only {row['dp4_speedup']:.2f}x the "
+        f"single-replica throughput (acceptance: >= 3x)"
+        for name, row in conv_rows.items()
+        if name.startswith("fleet_vs_single(") and not row["ge_3x_dp4"]]
     # gate BEFORE writing: the committed file is the baseline, and a
     # failing gate must NOT overwrite it (a rerun would then compare the
     # regressed values against themselves and pass)
@@ -255,8 +353,17 @@ def main() -> None:
     for name, row in conv_rows.items():
         if "us_per_call" in row:
             p = row.get("plan")
-            derived = (f"plan=b{p.get('b_blk', 1)}xc{p['c_blk']}"
-                       f"xm{p['m_blk']}xh{p['oh_blk']}" if p else "ref")
+            if p and "c_blk" in p:
+                derived = (f"plan=b{p.get('b_blk', 1)}xc{p['c_blk']}"
+                           f"xm{p['m_blk']}xh{p['oh_blk']}")
+            elif p and "bm" in p:
+                derived = f"gemm=m{p['bm']}xn{p['bn']}xk{p['bk']}"
+            elif row.get("fleet"):
+                f = row["fleet"]
+                derived = (f"fleet={f['mode']}xR{f['replicas']}"
+                           f"xS{f['pp_stages']}")
+            else:
+                derived = "ref"
             print(f"{name},{row['us_per_call']:.0f},{derived}")
 
     if violations:

@@ -235,6 +235,12 @@ class CNNConfig:
     #                                   autotune is off (manual fallback)
     serve_batch: int = 64             # micro-batch the serving launcher
     #                                   pads requests to (paper: batch 64)
+    # --- distributed serving (the fleet engine, PR 4) ---
+    replicas: int = 1                 # data-parallel replicas (mesh "data")
+    pp_stages: int = 1                # pipeline stages (mesh "pipe")
+    serve_microbatches: int = 0       # GPipe microbatches per round (0=auto)
+    max_queue: int = 0                # admission bound per replica queue
+    #                                   (0 = unbounded, no rejections)
 
     def smoke(self) -> "CNNConfig":
         """Shrink channel counts for CPU tests (same topology)."""

@@ -72,6 +72,17 @@ def time_bounds(flops: float, hbm_bytes: float, *,
     return (flops / (peak_ops(dtype) * max(mxu_util, 1e-9)),
             hbm_bytes / HBM_BW)
 
+def pipeline_bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    """GPipe fill-drain bubble fraction: (S-1)/(M+S-1).
+
+    The fraction of a pipeline round spent filling/draining rather than
+    at full stage occupancy — the serving engine's stage planner and the
+    fleet benchmarks use it to model pipeline-parallel round time as
+    ``(M + S - 1) * t_stage_max``.
+    """
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)
+
+
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,

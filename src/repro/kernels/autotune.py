@@ -277,6 +277,151 @@ def measure_plan(shape: ConvShape, plan: ConvPlan, *, iters: int = 3,
 
 
 # ---------------------------------------------------------------------------
+# GEMM design-space exploration (the FC / classifier side of the engine)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GemmShape:
+    """Static signature of one batched-FC GEMM — the registry key.
+
+    ``m`` is the row count (the serving micro-batch), ``k``/``n`` the
+    contraction/output features; ``dtype`` the COMPUTE dtype (int8 FC
+    plans differ from fp32 ones, closing the ROADMAP item "int8 FC plans
+    are untuned").
+    """
+    m: int
+    k: int
+    n: int
+    dtype: str = "float32"
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.k * self.n
+
+
+@dataclass(frozen=True)
+class GemmPlan:
+    """A tuned (bm, bn, bk) blocking for ``matmul_pipe``. Hashable, so it
+    rides through jit static arguments like :class:`ConvPlan`."""
+    bm: int
+    bn: int
+    bk: int
+    vmem_bytes: int = 0         # modelled working set (informational)
+    t_model: float = 0.0        # modelled roofline time, seconds/call
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def gemm_vmem_bytes(shape: GemmShape, bm: int, bn: int, bk: int) -> int:
+    """VMEM working set of one ``matmul_pipe`` grid step.
+
+    Pipelined refs (x, w, bias, out) are double-buffered; the accumulator
+    scratch is single-buffered and always 4 bytes/element (fp32, or int32
+    in the int8 mode). int8 keeps an fp32 bias and adds the fp32
+    requantize-scale tile — the same asymmetry as :func:`conv_vmem_bytes`.
+    """
+    dt = _DTYPE_BYTES.get(shape.dtype, 4)
+    quantized = shape.dtype == "int8"
+    bm, bn, bk = min(bm, shape.m), min(bn, shape.n), min(bk, shape.k)
+    x_t = bm * bk * dt
+    w_t = bk * bn * dt
+    b_t = bn * (4 if quantized else dt)
+    s_t = bn * 4 if quantized else 0
+    o_t = bm * bn * dt
+    acc = bm * bn * 4
+    return 2 * (x_t + w_t + b_t + s_t + o_t) + acc
+
+
+def score_gemm_plan(shape: GemmShape, bm: int, bn: int,
+                    bk: int) -> Tuple[float, float]:
+    """(t_compute, t_memory) roofline terms PER CALL for one blocking.
+
+    Models the traffic ``matmul_pipe``'s index maps generate: the x tile
+    is re-fetched once per N-tile, the w tile once per M-tile, the output
+    written once; padded lanes (block-rounded M/N/K) are charged as both
+    traffic and compute, the GEMM analogue of Fig. 7's channel-padding
+    waste. ``dtype`` shrinks streamed bytes and (int8) doubles the MXU
+    rate via :func:`repro.core.roofline.time_bounds`.
+    """
+    dt = _DTYPE_BYTES.get(shape.dtype, 4)
+    bm, bn, bk = min(bm, shape.m), min(bn, shape.n), min(bk, shape.k)
+    mp, np_, kp = (_round_up(shape.m, bm), _round_up(shape.n, bn),
+                   _round_up(shape.k, bk))
+    n_m, n_n = mp // bm, np_ // bn
+    x_bytes = n_n * mp * kp * dt
+    w_bytes = n_m * kp * np_ * dt
+    o_bytes = mp * np_ * dt
+    flops = 2 * mp * np_ * kp
+    return time_bounds(flops, x_bytes + w_bytes + o_bytes,
+                       mxu_util=mxu_utilization(bk, bn),
+                       dtype=shape.dtype)
+
+
+def enumerate_gemm_plans(shape: GemmShape,
+                         vmem_budget: int = VMEM_BYTES) -> List[GemmPlan]:
+    """All (bm, bn, bk) points that fit the VMEM budget."""
+    bm_cands = sorted({min(v, shape.m)
+                       for v in _pow2_upto(min(shape.m, 4 * MXU_DIM), lo=8)})
+    bn_cands = sorted({min(v, shape.n)
+                       for v in _pow2_upto(min(shape.n, 4 * MXU_DIM), lo=64)})
+    bk_cands = sorted({min(v, shape.k)
+                       for v in _pow2_upto(min(shape.k, 8 * MXU_DIM), lo=64)})
+    plans = []
+    for bm in bm_cands:
+        for bn in bn_cands:
+            for bk in bk_cands:
+                vmem = gemm_vmem_bytes(shape, bm, bn, bk)
+                if vmem > vmem_budget:
+                    continue
+                tc, tm = score_gemm_plan(shape, bm, bn, bk)
+                plans.append(GemmPlan(bm, bn, bk, vmem_bytes=vmem,
+                                      t_model=max(tc, tm)))
+    return plans
+
+
+def best_gemm_plan(shape: GemmShape,
+                   vmem_budget: int = VMEM_BYTES) -> GemmPlan:
+    """Lowest modelled-time feasible blocking (larger tiles break ties)."""
+    plans = enumerate_gemm_plans(shape, vmem_budget)
+    if not plans:
+        raise ValueError(
+            f"no feasible GEMM plan for {shape} under {vmem_budget} B VMEM")
+    return min(plans, key=lambda p: (p.t_model, -(p.bm * p.bn * p.bk)))
+
+
+_GEMM_REGISTRY: Dict[Tuple[GemmShape, str, int], GemmPlan] = {}
+
+
+def get_gemm_plan(shape: GemmShape, *, vmem_budget: int = VMEM_BYTES,
+                  backend: str = "tpu") -> GemmPlan:
+    """Memoised best GEMM plan (dtype rides inside the shape key)."""
+    key = (shape, backend, vmem_budget)
+    plan = _GEMM_REGISTRY.get(key)
+    if plan is None:
+        plan = best_gemm_plan(shape, vmem_budget)
+        _GEMM_REGISTRY[key] = plan
+    return plan
+
+
+def gemm_plan_for_layer(m: int, k: int, n: int, *, dtype: str = "float32",
+                        vmem_budget: int = VMEM_BYTES,
+                        backend: str = "tpu") -> GemmPlan:
+    """Convenience: tune one FC layer — ``m`` rows (the serving
+    micro-batch), ``k`` -> ``n`` features. The batch is part of the key,
+    so serving at a new micro-batch retunes the classifier."""
+    return get_gemm_plan(GemmShape(m=m, k=k, n=n, dtype=dtype),
+                         vmem_budget=vmem_budget, backend=backend)
+
+
+def gemm_registry_snapshot() -> List[dict]:
+    """JSON-serialisable view of every tuned GEMM (for BENCH_conv.json)."""
+    return [{"shape": dataclasses.asdict(k[0]), "backend": k[1],
+             "vmem_budget": k[2], "plan": p.to_dict()} for k, p in sorted(
+                 _GEMM_REGISTRY.items(), key=lambda kv: repr(kv[0]))]
+
+
+# ---------------------------------------------------------------------------
 # plan registry: (layer shape, dtype, backend) -> ConvPlan
 # ---------------------------------------------------------------------------
 
@@ -318,6 +463,7 @@ def plan_for_layer(x_shape: Tuple[int, ...], w_shape: Tuple[int, ...], *,
 
 def clear_registry() -> None:
     _REGISTRY.clear()
+    _GEMM_REGISTRY.clear()
 
 
 def registry_snapshot() -> List[dict]:

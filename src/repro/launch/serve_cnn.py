@@ -1,38 +1,32 @@
-"""Batched CNN serving launcher — the paper's inference scenario as a
-serving path (mirrors ``launch/serve.py``, which serves the LM family).
+"""CNN serving launcher — a thin CLI over ``repro.serve``.
 
-PipeCNN is an inference accelerator: its FC layers run in batch-64 mode so
-every weight fetch amortizes over the batch (§IV), and PR 2 extends the
-same argument to the conv pipeline by folding the batch into the grid
-(``b_blk`` images per grid step, one ``pallas_call`` per fused layer for
-the whole micro-batch). This launcher adds the missing serving layer on
-top:
+PipeCNN is an inference accelerator; this launcher is its serving
+scenario at fleet scale. PR 2 added the single-replica micro-batching
+queue (requests padded to the autotuned plan batch, batched-FC weight
+reuse); PR 3 added fixed-point serving (``--quant int8``); PR 4 moved
+the queue/clock machinery into the distributed engine
+(``repro.serve.ServeEngine``) and this file became argument parsing
+plus a report printer. The engine's three modes map to two flags:
 
-  * a request micro-batching queue: requests arrive on a simulated clock,
-    are drained in FIFO order and PADDED to the plan batch (``--batch``)
-    so the jitted forward compiles exactly once, at the shape the
-    autotuner planned for;
-  * per-request latency accounting (queueing + padded-batch service time),
-    reported as p50/p95 alongside throughput;
-  * the batched-FC weight-reuse mode for the classifier layers
-    (``CNNConfig.serve_batch`` sizes the GEMM row block to the
-    micro-batch);
-  * fixed-point serving (``--quant int8``, PR 3): the paper's
-    precision/resource trade — weights are quantized per-channel, a
-    synthetic calibration set fixes the activation scales offline, and
-    the whole micro-batch streams through the int8 kernels (int8 tiles,
-    int32 accumulation, fused requantize epilogues).
+  * ``--replicas N``  — N data-parallel replicas over the mesh "data"
+    axis (each runs the full batched/int8 Pallas pipeline);
+  * ``--pp-stages S`` — the network split into S roofline-balanced
+    pipeline stages streamed GPipe-style over the mesh "pipe" axis;
+  * both > 1         — hybrid DP x PP on the 2-D mesh.
 
-Usage:
-  PYTHONPATH=src python -m repro.launch.serve_cnn --arch alexnet --smoke \
-      --batch 8 --requests 16 [--quant int8]
+Multi-device runs on CPU need forced host devices, e.g.::
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.serve_cnn --arch alexnet \
+      --smoke --replicas 4 [--pp-stages 2] [--quant int8]
+
+``Request``/``Completion``/``MicroBatcher``/``latency_report`` are
+re-exported from ``repro.serve`` for backwards compatibility.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
-from dataclasses import dataclass
 from typing import List
 
 import jax
@@ -42,59 +36,9 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.config import CNNConfig, flops_per_image
 from repro.kernels import autotune
-from repro.models.cnn import cnn_forward, init_cnn_params
-
-
-@dataclass
-class Request:
-    """One inference request: an image plus its (simulated) arrival time."""
-    rid: int
-    image: np.ndarray
-    t_arrival: float
-
-
-@dataclass
-class Completion:
-    rid: int
-    pred: int
-    t_arrival: float
-    t_done: float
-
-    @property
-    def latency(self) -> float:
-        return self.t_done - self.t_arrival
-
-
-class MicroBatcher:
-    """FIFO queue that drains requests in plan-batch-sized chunks.
-
-    ``next_batch`` pops up to ``plan_batch`` requests and zero-pads the
-    image tensor to exactly ``plan_batch`` rows — the serving analogue of
-    the kernel's own batch padding: one compiled shape, garbage rows
-    computed and dropped. Returns (requests, images, n_real).
-    """
-
-    def __init__(self, plan_batch: int):
-        self.plan_batch = plan_batch
-        self._q: List[Request] = []
-
-    def submit(self, req: Request) -> None:
-        self._q.append(req)
-
-    def __len__(self) -> int:
-        return len(self._q)
-
-    def next_batch(self):
-        take, self._q = self._q[:self.plan_batch], self._q[self.plan_batch:]
-        if not take:
-            return [], None, 0
-        imgs = np.stack([r.image for r in take])
-        n_real = len(take)
-        if n_real < self.plan_batch:
-            pad = np.zeros((self.plan_batch - n_real,) + imgs.shape[1:],
-                           imgs.dtype)
-            imgs = np.concatenate([imgs, pad])
-        return take, jnp.asarray(imgs), n_real
+from repro.models.cnn import init_cnn_params
+from repro.serve import (Completion, MicroBatcher, Request,  # noqa: F401
+                         ServeEngine, latency_report)
 
 
 def synthetic_requests(n: int, hw: int, ch: int, rate: float,
@@ -112,62 +56,26 @@ def synthetic_requests(n: int, hw: int, ch: int, rate: float,
 
 
 def serve(cfg: CNNConfig, params, requests: List[Request], *,
-          batch: int, use_pallas: bool) -> List[Completion]:
-    """Run the micro-batched serving loop on a simulated clock.
+          batch: int, use_pallas: bool, replicas: int = 1,
+          pp_stages: int = 1, clock: str = "measured",
+          max_queue: int = 0) -> List[Completion]:
+    """Run the micro-batched serving loop (single replica by default).
 
-    The clock advances by each batch's measured wall time; a batch starts
-    at max(clock, first queued arrival), so reported latency is queueing
-    delay + service time, exactly what a real single-replica server sees.
+    Kept for API compatibility with the PR 2 launcher: a thin wrapper
+    over :class:`repro.serve.ServeEngine` returning just completions.
     """
-    fwd = jax.jit(lambda p, x: jnp.argmax(
-        cnn_forward(p, x, cfg, use_pallas=use_pallas), -1))
-
-    batcher = MicroBatcher(batch)
-    done: List[Completion] = []
-    clock = 0.0
-    pending = sorted(requests, key=lambda r: r.t_arrival)
-    compiled = False
-    while pending or len(batcher):
-        # admit everything that has arrived by now; if the queue is empty,
-        # the server idles until the next arrival
-        while pending and pending[0].t_arrival <= clock:
-            batcher.submit(pending.pop(0))
-        if not len(batcher):
-            clock = pending[0].t_arrival
-            continue
-        # serve whatever is queued (a partial chunk gets zero-padded to
-        # the plan batch — one compiled shape for every service step)
-        take, imgs, n_real = batcher.next_batch()
-        if not compiled:      # compile outside the simulated clock
-            fwd(params, imgs).block_until_ready()
-            compiled = True
-        t0 = time.perf_counter()
-        preds = np.asarray(fwd(params, imgs))
-        clock += time.perf_counter() - t0
-        for r, pred in zip(take, preds[:n_real]):
-            done.append(Completion(rid=r.rid, pred=int(pred),
-                                   t_arrival=r.t_arrival, t_done=clock))
+    engine = ServeEngine(cfg, params, batch=batch, replicas=replicas,
+                         pp_stages=pp_stages, use_pallas=use_pallas,
+                         clock=clock, max_queue=max_queue)
+    done, _ = engine.serve(requests)
     return done
 
 
-def default_request_count(batch: int) -> int:
-    """Two full micro-batches plus a deliberately non-dividing remainder,
-    so every serving demo exercises the pad-to-plan path."""
-    return 2 * batch + 3
-
-
-def latency_report(done: List[Completion]) -> dict:
-    """Throughput + nearest-rank latency percentiles for a served run."""
-    lats = np.array(sorted(c.latency for c in done))
-    makespan = max(c.t_done for c in done)
-
-    def rank(q: float) -> int:                  # nearest-rank: ceil(qn)-1
-        return max(0, -(-int(q * 100 * len(lats)) // 100) - 1)
-
-    return {"n": len(done),
-            "throughput": len(done) / makespan,
-            "p50_ms": lats[rank(0.50)] * 1e3,
-            "p95_ms": lats[rank(0.95)] * 1e3}
+def default_request_count(batch: int, replicas: int = 1) -> int:
+    """Two full micro-batches per replica plus a deliberately
+    non-dividing remainder, so every serving demo exercises the
+    pad-to-plan path."""
+    return 2 * batch * replicas + 3
 
 
 def main() -> None:
@@ -177,10 +85,25 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced channel counts (CPU-friendly)")
     ap.add_argument("--batch", type=int, default=8,
-                    help="micro-batch the queue pads requests to")
+                    help="micro-batch each replica queue pads requests to")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="data-parallel replicas over the mesh 'data' "
+                         "axis (default: CNNConfig.replicas)")
+    ap.add_argument("--pp-stages", type=int, default=0,
+                    help="pipeline stages over the mesh 'pipe' axis "
+                         "(default: CNNConfig.pp_stages)")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="GPipe microbatches per pipeline round (0=auto)")
+    ap.add_argument("--clock", choices=("measured", "modeled"),
+                    default="measured",
+                    help="advance the simulated clock by wall time or by "
+                         "the roofline cost model (deterministic)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="admission control: reject when every replica "
+                         "queue holds this many requests (0 = unbounded)")
     ap.add_argument("--requests", type=int, default=0,
-                    help="total synthetic requests (default 2*batch + 3, "
-                         "a deliberately non-dividing count)")
+                    help="total synthetic requests (default "
+                         "2*batch*replicas + 3, a non-dividing count)")
     ap.add_argument("--rate", type=float, default=200.0,
                     help="simulated request arrival rate (req/s)")
     ap.add_argument("--no-pallas", action="store_true",
@@ -199,10 +122,13 @@ def main() -> None:
                          "use repro.launch.serve for the LM family")
     if args.smoke:
         cfg = cfg.smoke()
+    replicas = args.replicas or cfg.replicas
+    pp_stages = args.pp_stages or cfg.pp_stages
     # the micro-batch IS the batched-FC block: classifier weight tiles
     # amortize over exactly the images the queue hands us
-    cfg = dataclasses.replace(cfg, serve_batch=args.batch, quant=args.quant)
-    n_req = args.requests or default_request_count(args.batch)
+    cfg = dataclasses.replace(cfg, serve_batch=args.batch, quant=args.quant,
+                              replicas=replicas, pp_stages=pp_stages)
+    n_req = args.requests or default_request_count(args.batch, replicas)
 
     key = jax.random.key(0)
     params = init_cnn_params(key, cfg)
@@ -226,29 +152,43 @@ def main() -> None:
               f"per-tensor activations); input scale "
               f"{params.in_scale:.3g}")
 
-    done = serve(cfg, params, requests, batch=args.batch,
-                 use_pallas=use_pallas)
-    assert len(done) == n_req, (len(done), n_req)
-    rep = latency_report(done)
-    gops = flops_per_image(cfg) * rep["throughput"] / 1e9
+    engine = ServeEngine(cfg, params, batch=args.batch, replicas=replicas,
+                         pp_stages=pp_stages,
+                         n_microbatches=args.microbatches,
+                         use_pallas=use_pallas, clock=args.clock,
+                         max_queue=args.max_queue)
+    if engine.stage_plan is not None:
+        sp = engine.stage_plan
+        print(f"[serve_cnn] {pp_stages} pipeline stages "
+              f"(balance {sp.balance:.2f}, bubble "
+              f"{sp.bubble(engine.n_micro):.0%} at M={engine.n_micro}): "
+              + " | ".join(f"s{i}:{len(s.groups)}g "
+                           f"{s.t_model * 1e6:.0f}us"
+                           for i, s in enumerate(sp.stages)))
+    done, rep = engine.serve(requests)
+    assert len(done) + rep.n_rejected == n_req, (len(done), n_req)
+    gops = flops_per_image(cfg) * rep.throughput / 1e9
 
     print(f"[serve_cnn] {args.arch}{' (smoke)' if args.smoke else ''}: "
-          f"{n_req} requests @ micro-batch {args.batch} "
-          f"({'pallas' if use_pallas else 'xla-ref'} path"
+          f"{n_req} requests @ micro-batch {args.batch}, mode "
+          f"{engine.mode} (R={replicas}, S={pp_stages}; "
+          f"{'pallas' if use_pallas else 'xla-ref'} path"
           f"{', int8' if args.quant == 'int8' else ''})")
-    print(f"[serve_cnn] throughput {rep['throughput']:.1f} img/s "
-          f"({gops:.2f} GOPS); latency p50 {rep['p50_ms']:.1f} ms, "
-          f"p95 {rep['p95_ms']:.1f} ms")
+    print(f"[serve_cnn] {rep.summary()}")
+    print(f"[serve_cnn] aggregate {gops:.2f} GOPS at the reported "
+          f"throughput")
     if use_pallas and cfg.autotune:
         dtype = "int8" if args.quant == "int8" else cfg.dtype
         rows = [r for r in autotune.registry_snapshot()
-                if r["shape"]["b"] == args.batch
+                if r["shape"]["b"] in (args.batch, engine.mb)
                 and r["shape"]["dtype"] == dtype]
         picked = sorted({(r["plan"]["b_blk"], r["plan"]["c_blk"],
                           r["plan"]["m_blk"], r["plan"]["oh_blk"])
                          for r in rows})
-        print(f"[serve_cnn] {len(rows)} conv layers tuned at batch "
-              f"{args.batch} ({dtype} plans); (b,c,m,oh)_blk points in "
+        gemm = [r for r in autotune.gemm_registry_snapshot()
+                if r["shape"]["dtype"] == dtype]
+        print(f"[serve_cnn] {len(rows)} conv plans + {len(gemm)} GEMM "
+              f"plans tuned ({dtype}); conv (b,c,m,oh)_blk points in "
               f"use: {picked}")
     print("[serve_cnn] OK")
 

@@ -106,13 +106,72 @@ def _conv_group_plan(cfg: CNNConfig, l: ConvLayer, kw: Dict[str, Any],
         dtype=dtype, vmem_budget=cfg.vmem_budget)
 
 
-def _fc_block_kwargs(cfg: CNNConfig) -> Dict[str, int]:
+def _fc_block_kwargs(cfg: CNNConfig, *, m: int = 0, k: int = 0, n: int = 0,
+                     dtype: str = "float32",
+                     use_pallas: bool = False) -> Dict[str, int]:
     """Batched-FC GEMM blocks (paper §IV batch-64 mode), shared by both
     paths: bm covers the whole micro-batch so each weight tile fetched
-    from HBM is applied to every image before the next tile streams in."""
+    from HBM is applied to every image before the next tile streams in.
+
+    With autotuning on and a concrete (m, k, n) GEMM, the blocks come
+    from the dtype-aware GEMM DSE (``autotune.gemm_plan_for_layer``) —
+    the classifier analogue of the conv plan lookup, closing the ROADMAP
+    item "int8 FC plans are untuned". The CNNConfig heuristics remain
+    the manual fallback.
+    """
+    if use_pallas and cfg.autotune and m and k and n:
+        from repro.kernels.autotune import gemm_plan_for_layer
+        gp = gemm_plan_for_layer(m, k, n, dtype=dtype,
+                                 vmem_budget=cfg.vmem_budget)
+        return dict(bm=gp.bm, bn=gp.bn, bk=gp.bk)
     return dict(bm=max(128, cfg.serve_batch),
                 bk=128 * max(1, cfg.vec_size // 8),
                 bn=128 * max(1, cfg.cu_num // 8))
+
+
+def run_group(params, x: jax.Array, cfg: CNNConfig,
+              group: Tuple[int, ...], *,
+              use_pallas: bool = False) -> jax.Array:
+    """Execute ONE fusion group of the fp32 pipeline.
+
+    This is the stage-sliceable unit the distributed serving engine
+    partitions over pipeline stages (``repro.serve.stage_planner``):
+    ``cnn_forward`` is exactly a fold of this function over
+    ``fuse_plan(cfg)``.
+    """
+    l = cfg.layers[group[0]]
+    p = params[group[0]]
+    if l.kind == "conv":
+        pool = cfg.layers[group[1]] if len(group) == 2 else None
+        kw = _conv_group_kwargs(cfg, l, pool, use_pallas=use_pallas)
+        if use_pallas and cfg.autotune:
+            kw["plan"] = _conv_group_plan(cfg, l, kw, x.shape,
+                                          p["w"].shape, cfg.dtype)
+        # grouped conv (AlexNet two-tower) runs INSIDE the one kernel:
+        # the M-tile grid axis spans groups, no concat on the hot path
+        return ops.fused_conv(x, p["w"], p["b"], **kw)
+    if l.kind == "pool":
+        from repro.kernels.ref import pool_ref
+        return pool_ref(x, l.pool, l.kernel, l.stride)
+    if l.kind == "lrn":
+        return ops.lrn(x, use_pallas=use_pallas)
+    if l.kind == "fc":
+        B = x.shape[0]
+        xf = x.reshape(B, -1)
+        return ops.fc(xf, p["w"], p["b"], relu=l.relu,
+                      use_pallas=use_pallas,
+                      **_fc_block_kwargs(cfg, m=B, k=xf.shape[1],
+                                         n=p["w"].shape[1], dtype=cfg.dtype,
+                                         use_pallas=use_pallas))
+    raise ValueError(f"unknown layer kind {l.kind!r}")
+
+
+def cnn_forward_stage(params, x: jax.Array, cfg: CNNConfig,
+                      groups, *, use_pallas: bool = False) -> jax.Array:
+    """Run a contiguous slice of fusion groups — one pipeline STAGE."""
+    for group in groups:
+        x = run_group(params, x, cfg, group, use_pallas=use_pallas)
+    return x
 
 
 def cnn_forward(params, x: jax.Array, cfg: CNNConfig, *,
@@ -132,28 +191,69 @@ def cnn_forward(params, x: jax.Array, cfg: CNNConfig, *,
             "cfg.quant='int8' but params are not QuantizedCNNParams; "
             "run repro.quant.calibrate_cnn(params, calib_batch, cfg) first")
     plan = fuse_plan(cfg) if fused else [(i,) for i in range(len(cfg.layers))]
-    for group in plan:
-        l = cfg.layers[group[0]]
-        p = params[group[0]]
-        if l.kind == "conv":
-            pool = cfg.layers[group[1]] if len(group) == 2 else None
-            kw = _conv_group_kwargs(cfg, l, pool, use_pallas=use_pallas)
-            if use_pallas and cfg.autotune:
-                kw["plan"] = _conv_group_plan(cfg, l, kw, x.shape,
-                                              p["w"].shape, cfg.dtype)
-            # grouped conv (AlexNet two-tower) runs INSIDE the one kernel:
-            # the M-tile grid axis spans groups, no concat on the hot path
-            x = ops.fused_conv(x, p["w"], p["b"], **kw)
-        elif l.kind == "pool":
-            from repro.kernels.ref import pool_ref
-            x = pool_ref(x, l.pool, l.kernel, l.stride)
-        elif l.kind == "lrn":
-            x = ops.lrn(x, use_pallas=use_pallas)
-        elif l.kind == "fc":
-            B = x.shape[0]
-            x = ops.fc(x.reshape(B, -1), p["w"], p["b"], relu=l.relu,
-                       use_pallas=use_pallas, **_fc_block_kwargs(cfg))
-    return x
+    return cnn_forward_stage(params, x, cfg, plan, use_pallas=use_pallas)
+
+
+def run_group_quant(qp, q: jax.Array, cfg: CNNConfig,
+                    group: Tuple[int, ...], *,
+                    use_pallas: bool = False) -> jax.Array:
+    """Execute ONE fusion group of the int8 pipeline on int8 codes.
+
+    The fixed-point twin of :func:`run_group` (and the quantized
+    stage-sliceable unit): every scale it needs is static inside ``qp``,
+    so a stage can start from any group boundary given that boundary's
+    int8 codes.
+    """
+    from repro.kernels.ref import pool_ref
+    from repro.quant.core import dequantize, quantize
+
+    l = cfg.layers[group[0]]
+    ql = qp.layers[group[0]]
+    if l.kind == "conv":
+        pool = cfg.layers[group[1]] if len(group) == 2 else None
+        kw = _conv_group_kwargs(cfg, l, pool, use_pallas=use_pallas)
+        if use_pallas and cfg.autotune:
+            # dtype rides in the plan-cache key: int8 tiles are 4x
+            # smaller, so the tuner picks different (b,c,m,oh)_blk
+            # points than the fp32 plans for the same layer
+            kw["plan"] = _conv_group_plan(cfg, l, kw, q.shape,
+                                          ql.w_q.shape, "int8")
+        return ops.fused_conv_q(q, ql.w_q, ql.b, ql.scale,
+                                out_scale=ql.y_scale, **kw)
+    if l.kind == "pool":
+        # max-pool commutes with the int8 map: pool the codes, keep scale
+        return pool_ref(q, l.pool, l.kernel, l.stride)
+    if l.kind == "lrn":
+        # LRN is nonlinear in scale — run it off the fixed-point
+        # pipeline (as PipeCNN does) and requantize its output
+        xf = ops.lrn(dequantize(q, ql.x_scale), use_pallas=use_pallas)
+        return quantize(xf, ql.y_scale)
+    if l.kind == "fc":
+        B = q.shape[0]
+        qf = q.reshape(B, -1)
+        return ops.fc_q(qf, ql.w_q, ql.b, ql.scale,
+                        relu=l.relu, use_pallas=use_pallas,
+                        out_scale=ql.y_scale,
+                        **_fc_block_kwargs(cfg, m=B, k=qf.shape[1],
+                                           n=ql.w_q.shape[1], dtype="int8",
+                                           use_pallas=use_pallas))
+    raise ValueError(f"unknown layer kind {l.kind!r}")
+
+
+def cnn_forward_stage_quant(qp, q: jax.Array, cfg: CNNConfig,
+                            groups, *, use_pallas: bool = False) -> jax.Array:
+    """Run a contiguous slice of int8 fusion groups — one pipeline STAGE.
+
+    ``q`` is the boundary activation: int8 codes (any interior boundary)
+    or the raw fp32 image batch for the first stage, which this function
+    quantizes at the network edge exactly like ``cnn_forward_quant``.
+    """
+    from repro.quant.core import quantize
+    if q.dtype != jnp.int8:
+        q = quantize(q, qp.in_scale)
+    for group in groups:
+        q = run_group_quant(qp, q, cfg, group, use_pallas=use_pallas)
+    return q
 
 
 def _quant_groups(qp, x: jax.Array, cfg: CNNConfig, *,
@@ -166,41 +266,15 @@ def _quant_groups(qp, x: jax.Array, cfg: CNNConfig, *,
     accuracy harness consumes the intermediates; ``cnn_forward_quant``
     keeps only the last.
     """
-    from repro.kernels.ref import pool_ref
-    from repro.quant.core import dequantize, quantize
+    from repro.quant.core import quantize
 
-    plan = fuse_plan(cfg)
     q = quantize(x, qp.in_scale)
     s = qp.in_scale
-    for group in plan:
+    for group in fuse_plan(cfg):
         l = cfg.layers[group[0]]
         ql = qp.layers[group[0]]
-        if l.kind == "conv":
-            pool = cfg.layers[group[1]] if len(group) == 2 else None
-            kw = _conv_group_kwargs(cfg, l, pool, use_pallas=use_pallas)
-            if use_pallas and cfg.autotune:
-                # dtype rides in the plan-cache key: int8 tiles are 4x
-                # smaller, so the tuner picks different (b,c,m,oh)_blk
-                # points than the fp32 plans for the same layer
-                kw["plan"] = _conv_group_plan(cfg, l, kw, q.shape,
-                                              ql.w_q.shape, "int8")
-            q = ops.fused_conv_q(q, ql.w_q, ql.b, ql.scale,
-                                 out_scale=ql.y_scale, **kw)
-            s = ql.y_scale
-        elif l.kind == "pool":
-            # max-pool commutes with the int8 map: pool the codes, keep s
-            q = pool_ref(q, l.pool, l.kernel, l.stride)
-        elif l.kind == "lrn":
-            # LRN is nonlinear in scale — run it off the fixed-point
-            # pipeline (as PipeCNN does) and requantize its output
-            xf = ops.lrn(dequantize(q, ql.x_scale), use_pallas=use_pallas)
-            q = quantize(xf, ql.y_scale)
-            s = ql.y_scale
-        elif l.kind == "fc":
-            B = q.shape[0]
-            q = ops.fc_q(q.reshape(B, -1), ql.w_q, ql.b, ql.scale,
-                         relu=l.relu, use_pallas=use_pallas,
-                         out_scale=ql.y_scale, **_fc_block_kwargs(cfg))
+        q = run_group_quant(qp, q, cfg, group, use_pallas=use_pallas)
+        if l.kind != "pool":           # pool passes the scale through
             s = ql.y_scale
         yield group, q, s
 

@@ -116,6 +116,21 @@ def named(mesh: Mesh, rules: Dict[str, AxisRule], shape: Sequence[int],
     return NamedSharding(mesh, spec_for(shape, logical, mesh, rules))
 
 
+def batch_sharding(mesh: Mesh, shape: Sequence[int],
+                   rules: Optional[Dict[str, AxisRule]] = None
+                   ) -> NamedSharding:
+    """Argument sharding for a batch-leading tensor via the "batch" rule.
+
+    The serving engine's data-parallel entry point: a padded request
+    super-batch ``(replicas * micro_batch, ...)`` device_put with this
+    sharding lands one replica's micro-batch on each shard of the mesh
+    "data" axis. Non-batch dims stay unsharded; a batch the data axis
+    does not divide falls back to replicated (``spec_for`` auto-drop).
+    """
+    logical = ("batch",) + (None,) * (len(shape) - 1)
+    return named(mesh, rules or DEFAULT_RULES, shape, *logical)
+
+
 # ---------------------------------------------------------------------------
 # Parameter shardings: leaf-name -> logical axes per dimension
 # ---------------------------------------------------------------------------

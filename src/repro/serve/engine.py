@@ -1,0 +1,316 @@
+"""Distributed CNN serving engine: one router, a mesh of replicas.
+
+The PipeCNN cascade at fleet scale. Three execution modes behind one
+API, selected by ``(replicas, pp_stages)`` over a 2-D ``(data, pipe)``
+device mesh:
+
+  * **dp** — data-parallel replicas: each gang-scheduled round drains
+    one padded micro-batch per replica, packs them into a super-batch
+    and shards it over the mesh "data" axis
+    (``parallel.sharding.batch_sharding``, the "batch" rule); every
+    replica runs the full batched/int8 Pallas pipeline on its shard.
+  * **pp** — pipeline-parallel stages: the network is split into
+    roofline-balanced stages (``stage_planner``) resident one-per-device
+    on the "pipe" axis; microbatches stream through
+    ``pipeline_par.pipeline_forward_stages`` exactly like the paper's
+    kernel cascade — stage s computes microbatch m while stage s-1
+    computes m+1, activations hopping stages via collective_permute.
+  * **hybrid** — DP x PP: the super-batch shards over "data" while every
+    data shard streams its rows through the same "pipe" stages (one
+    shard_map, see ``pipeline_forward_stages(dp_axis=...)``).
+
+CNN stages change activation shape, so pipeline activations travel in a
+canonical flat fp32 buffer (max boundary elements wide); each stage's
+branch (``jax.lax.switch`` on the stage index) unflattens its static
+input shape, runs its fusion groups (``models.cnn.cnn_forward_stage`` /
+``..._stage_quant``), and re-flattens. int8 codes ride the fp32 buffer
+exactly (|code| <= 127), keeping the quantized pipeline bit-exact.
+
+Scheduling reuses the single-replica launcher's simulated clock as a
+fleet discrete-event loop: arrivals are admitted to the least-loaded
+replica queue (``Router``, with SLO admission control), each round's
+service time advances the clock once for all concurrently-busy
+replicas. ``clock="measured"`` uses wall time (NB: host-platform
+"devices" execute serially, so measured DP rounds do not speed up on
+CPU); ``clock="modeled"`` uses the same roofline cost model the
+autotuner ranks plans with — deterministic, and the basis of the
+``fleet_vs_single`` benchmark rows. ``execute=False`` skips the actual
+forwards entirely (pure discrete-event simulation; predictions are -1),
+which is how the benchmarks model fleets without needing 8 devices.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import CNNConfig
+from repro.models.cnn import (cnn_forward, cnn_forward_stage,
+                              cnn_forward_stage_quant)
+from repro.parallel.pipeline_par import pipeline_forward_stages
+from repro.parallel.sharding import batch_sharding
+from repro.serve.report import FleetReport, fleet_report
+from repro.serve.router import Completion, Request, Router
+from repro.serve.stage_planner import StagePlan, plan_stages, total_cost
+
+
+def _prod(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def make_stage_branches(params, cfg: CNNConfig, stage_plan: StagePlan, *,
+                        use_pallas: bool, quant: bool, maxe: int):
+    """One ``buf (rows, maxe) -> buf`` branch per pipeline stage.
+
+    Each branch has static interior shapes (its stage's boundary
+    activation); `jax.lax.switch` over the traced stage index dispatches
+    among them inside the shard_map body.
+    """
+    def branch_for(si: int, stage):
+        n_in = _prod(stage.in_shape)
+
+        def br(buf):
+            x = buf[:, :n_in].reshape(buf.shape[0], *stage.in_shape)
+            if quant:
+                # interior boundaries carry int8 codes in the fp32
+                # buffer (exact: |code| <= 127); the first stage gets
+                # the raw fp32 image and quantizes at the network edge
+                if si > 0:
+                    x = x.astype(jnp.int8)
+                out = cnn_forward_stage_quant(params, x, cfg, stage.groups,
+                                              use_pallas=use_pallas)
+            else:
+                out = cnn_forward_stage(params, x, cfg, stage.groups,
+                                        use_pallas=use_pallas)
+            flat = out.reshape(out.shape[0], -1).astype(jnp.float32)
+            return jnp.pad(flat, ((0, 0), (0, maxe - flat.shape[1])))
+
+        return br
+
+    return [branch_for(si, s) for si, s in enumerate(stage_plan.stages)]
+
+
+def pipeline_logits(params, x: jax.Array, cfg: CNNConfig, mesh,
+                    stage_plan: StagePlan, *, n_microbatches: int,
+                    use_pallas: bool = True, quant: bool = False,
+                    dp_axis: Optional[str] = None,
+                    axis: str = "pipe") -> jax.Array:
+    """Run a (B, H, W, C) batch through device-resident pipeline stages.
+
+    Returns (B, n_classes) logits — numerically identical to the
+    unsharded ``cnn_forward`` (fp32 allclose; int8 bit-exact, since the
+    stage slicing changes scheduling, never math). ``B`` must divide
+    into ``n_microbatches`` (times the dp_axis size, if given).
+    """
+    n_out = _prod(stage_plan.stages[-1].out_shape)
+    maxe = max(stage_plan.max_boundary_elems(), n_out)
+    branches = make_stage_branches(params, cfg, stage_plan,
+                                   use_pallas=use_pallas, quant=quant,
+                                   maxe=maxe)
+
+    def stage_fn(idx, h):
+        return jax.lax.switch(idx, branches, h)
+
+    flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
+    flat = jnp.pad(flat, ((0, 0), (0, maxe - flat.shape[1])))
+    out = pipeline_forward_stages(stage_fn, flat, mesh, axis=axis,
+                                  n_microbatches=n_microbatches,
+                                  dp_axis=dp_axis)
+    return out[:, :n_out]
+
+
+class ServeEngine:
+    """Routes request traffic onto a mesh of CNN replicas.
+
+    ``params`` may be the fp32 param list or a ``QuantizedCNNParams``
+    (the engine auto-detects and serves fixed-point, like
+    ``cnn_forward``).
+    """
+
+    def __init__(self, cfg: CNNConfig, params, *, batch: int = 8,
+                 replicas: int = 1, pp_stages: int = 1,
+                 n_microbatches: int = 0, use_pallas: bool = True,
+                 clock: str = "measured", max_queue: int = 0,
+                 execute: bool = True):
+        from repro.quant.calibrate import QuantizedCNNParams
+        if clock not in ("measured", "modeled"):
+            raise ValueError(f"unknown clock {clock!r}")
+        self.cfg = cfg
+        self.params = params
+        self.quant = isinstance(params, QuantizedCNNParams)
+        self.dtype = "int8" if self.quant else cfg.dtype
+        self.batch = batch
+        self.replicas = replicas
+        self.pp_stages = pp_stages
+        self.use_pallas = use_pallas
+        self.clock_mode = clock
+        self.execute = execute
+        R, S = replicas, pp_stages
+        if R < 1 or S < 1:
+            raise ValueError("replicas and pp_stages must be >= 1")
+        self.mode = ("single" if R * S == 1 else
+                     "dp" if S == 1 else
+                     "pp" if R == 1 else "hybrid")
+
+        # microbatches: GPipe wants M >= S to amortize the bubble, but a
+        # larger M shrinks the per-stage microbatch and loses the batch
+        # amortization the conv plans are tuned for — so by default the
+        # engine sweeps the divisors of the plan batch and keeps the M
+        # minimizing the MODELED round time (the DSE applied to the
+        # schedule itself). mb must divide the batch so every microbatch
+        # compiles once.
+        if S > 1:
+            if n_microbatches:
+                if batch % n_microbatches:
+                    raise ValueError(
+                        f"n_microbatches={n_microbatches} must divide the "
+                        f"plan batch {batch}")
+                cands = [n_microbatches]
+            else:
+                cands = [d for d in range(1, batch + 1) if batch % d == 0]
+            scored = []
+            for m in cands:
+                sp = plan_stages(cfg, S, batch=batch // m, dtype=self.dtype)
+                scored.append((sp.round_time(m), m, sp))
+            t_round, self.n_micro, self.stage_plan = min(
+                scored, key=lambda c: (c[0], c[1]))
+            self.t_round_model = t_round
+        else:
+            self.n_micro = 1
+            self.stage_plan = None
+            # one replica's micro-batch; dp replicas run concurrently
+            self.t_round_model = total_cost(cfg, batch, dtype=self.dtype)
+        self.mb = batch // self.n_micro
+        self.router = Router(R, batch, max_queue=max_queue)
+        self.mesh = None
+        self._round_fn = None
+        if execute:
+            if R * S > 1:
+                if jax.device_count() < R * S:
+                    raise RuntimeError(
+                        f"{self.mode} mode needs {R * S} devices, have "
+                        f"{jax.device_count()}; set XLA_FLAGS="
+                        f"--xla_force_host_platform_device_count={R * S}")
+                from repro.launch.mesh import compat_make_mesh
+                self.mesh = compat_make_mesh((R, S), ("data", "pipe"))
+            self._round_fn = self._build_round_fn()
+
+    # -- forward builders --------------------------------------------------
+
+    def _build_round_fn(self):
+        cfg, params = self.cfg, self.params
+        R = self.replicas
+
+        if self.pp_stages == 1:
+            def logits_fn(imgs):        # (R*batch, H, W, C)
+                return cnn_forward(params, imgs, cfg,
+                                   use_pallas=self.use_pallas)
+            fn = jax.jit(lambda imgs: jnp.argmax(logits_fn(imgs), -1))
+            if self.mesh is None:
+                return lambda imgs: fn(imgs)
+
+            def dp_round(imgs):
+                sharded = jax.device_put(
+                    imgs, batch_sharding(self.mesh, imgs.shape))
+                return fn(sharded)
+            return dp_round
+
+        sp = self.stage_plan
+
+        def pp_fn(imgs_flat):           # (n_micro*R*mb, H, W, C)
+            logits = pipeline_logits(
+                params, imgs_flat, cfg, self.mesh, sp,
+                n_microbatches=self.n_micro, use_pallas=self.use_pallas,
+                quant=self.quant, dp_axis="data")
+            return jnp.argmax(logits, -1)
+        return jax.jit(pp_fn)
+
+    def _pack(self, round_items) -> np.ndarray:
+        """Super-batch for one gang round.
+
+        dp: replica-major ``(R*batch, ...)``. pp/hybrid: microbatch-major
+        ``(n_micro * R * mb, ...)`` so the shard_map's microbatch reshape
+        puts replica r's rows on data-shard r of every microbatch.
+        """
+        shape = (self.cfg.input_hw, self.cfg.input_hw, self.cfg.input_ch)
+        per_rep = []
+        for _, _, imgs, n_real in round_items:
+            if imgs is None:
+                per_rep.append(np.zeros((self.batch,) + shape, np.float32))
+            else:
+                per_rep.append(np.asarray(imgs))
+        arr = np.stack(per_rep)                     # (R, batch, ...)
+        if self.pp_stages > 1:
+            arr = arr.reshape(self.replicas, self.n_micro, self.mb, *shape)
+            arr = arr.transpose(1, 0, 2, 3, 4, 5)   # (n_micro, R, mb, ...)
+        return arr.reshape(-1, *shape)
+
+    def _unpack_preds(self, preds: np.ndarray) -> np.ndarray:
+        """(rounds rows,) -> (R, batch) back in each replica's order."""
+        if self.pp_stages > 1:
+            p = preds.reshape(self.n_micro, self.replicas, self.mb)
+            return p.transpose(1, 0, 2).reshape(self.replicas, self.batch)
+        return preds.reshape(self.replicas, self.batch)
+
+    # -- the serving loop --------------------------------------------------
+
+    def serve(self, requests: List[Request]
+              ) -> Tuple[List[Completion], FleetReport]:
+        """Drain a request stream; returns (completions, fleet report).
+
+        The discrete-event loop: admit arrivals up to the clock (router
+        policy + admission control), gang-drain one padded micro-batch
+        per replica, advance the clock by the round's service time —
+        concurrent across replicas, exactly the mesh semantics.
+        """
+        router = self.router
+        done: List[Completion] = []
+        busy = [0.0] * self.replicas
+        clock, rounds = 0.0, 0
+        pending = sorted(requests, key=lambda r: r.t_arrival)
+        compiled = not self.execute
+        while pending or router.backlog():
+            while pending and pending[0].t_arrival <= clock:
+                router.dispatch(pending.pop(0))
+            if not router.backlog():
+                if not pending:
+                    break
+                clock = pending[0].t_arrival
+                continue
+            round_items = router.drain_round()
+            t_wall = 0.0
+            if self.execute:
+                imgs = jnp.asarray(self._pack(round_items))
+                if not compiled:        # compile outside the clock
+                    np.asarray(self._round_fn(imgs))
+                    compiled = True
+                t0 = time.perf_counter()
+                preds = self._unpack_preds(np.asarray(self._round_fn(imgs)))
+                t_wall = time.perf_counter() - t0
+            else:
+                preds = np.full((self.replicas, self.batch), -1)
+            t_service = (self.t_round_model
+                         if self.clock_mode == "modeled" else t_wall)
+            clock += t_service
+            rounds += 1
+            for r, take, _, n_real in round_items:
+                if n_real:
+                    busy[r] += t_service
+                for req, pred in zip(take, preds[r][:n_real]):
+                    done.append(Completion(
+                        rid=req.rid, pred=int(pred),
+                        t_arrival=req.t_arrival, t_done=clock, replica=r))
+        rep = fleet_report(
+            done, router.rejected, mode=self.mode, replicas=self.replicas,
+            pp_stages=self.pp_stages, batch=self.batch,
+            clock=self.clock_mode, rounds=rounds, busy_s=busy,
+            makespan_s=clock,
+            bubble_fraction=(self.stage_plan.bubble(self.n_micro)
+                             if self.stage_plan else 0.0))
+        return done, rep

@@ -1,0 +1,106 @@
+"""Latency / throughput accounting for served runs — single replica or
+fleet.
+
+``latency_report`` is the per-run summary the original single-replica
+launcher printed (nearest-rank percentiles over completion latencies);
+it now lives here so the distributed engine, the thin CLI
+(``repro.launch.serve_cnn`` re-exports it) and the benchmarks all share
+one hardened implementation: an empty completion list returns a
+well-formed zero report instead of raising, and the nearest-rank
+percentile is exact down to n=1 (``rank(q) = ceil(q*n) - 1``).
+
+``FleetReport`` adds the fleet-level view: mode, aggregate throughput,
+admission statistics, per-replica utilization, and the pipeline bubble
+fraction when stages are involved.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import List, Sequence
+
+import numpy as np
+
+
+def nearest_rank(lats: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile: the ceil(q*n)-th smallest value (1-based).
+
+    Exact for every n >= 1 (n=1 returns the single sample for any q);
+    ``lats`` must be sorted ascending.
+    """
+    n = len(lats)
+    if n == 0:
+        return float("nan")
+    rank = max(0, math.ceil(q * n) - 1)
+    return float(lats[min(rank, n - 1)])
+
+
+def latency_report(done: List) -> dict:
+    """Throughput + nearest-rank latency percentiles for a served run.
+
+    ``done`` is a list of completions exposing ``.latency`` and
+    ``.t_done``. Hardened: an empty list yields a well-formed report
+    (n=0, zero throughput, NaN percentiles) so callers can always
+    format/serialise the result — draining an empty queue is a normal
+    serving condition, not an error.
+    """
+    if not done:
+        return {"n": 0, "throughput": 0.0,
+                "p50_ms": float("nan"), "p95_ms": float("nan")}
+    lats = np.array(sorted(c.latency for c in done))
+    makespan = max(c.t_done for c in done)
+    return {"n": len(done),
+            "throughput": len(done) / makespan if makespan > 0 else 0.0,
+            "p50_ms": nearest_rank(lats, 0.50) * 1e3,
+            "p95_ms": nearest_rank(lats, 0.95) * 1e3}
+
+
+@dataclass
+class FleetReport:
+    """Fleet-level serving summary (one engine run)."""
+    mode: str                          # "single" | "dp" | "pp" | "hybrid"
+    replicas: int
+    pp_stages: int
+    batch: int                         # per-replica micro-batch
+    clock: str                         # "measured" | "modeled"
+    n_done: int = 0
+    n_rejected: int = 0                # admission-control rejections
+    rounds: int = 0                    # gang-scheduled service rounds
+    throughput: float = 0.0            # img/s, aggregate over the fleet
+    p50_ms: float = float("nan")
+    p95_ms: float = float("nan")
+    makespan_s: float = 0.0
+    utilization: List[float] = field(default_factory=list)  # per replica
+    bubble_fraction: float = 0.0       # GPipe fill/drain share (pp modes)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def summary(self) -> str:
+        util = (", util " + "/".join(f"{u:.0%}" for u in self.utilization)
+                if self.utilization else "")
+        rej = f", {self.n_rejected} rejected" if self.n_rejected else ""
+        bub = (f", bubble {self.bubble_fraction:.0%}"
+               if self.pp_stages > 1 else "")
+        return (f"[{self.mode}] {self.n_done} served in {self.rounds} "
+                f"rounds ({self.clock} clock): {self.throughput:.1f} img/s, "
+                f"p50 {self.p50_ms:.1f} ms, p95 {self.p95_ms:.1f} ms"
+                f"{util}{rej}{bub}")
+
+
+def fleet_report(done: List, rejected: List, *, mode: str, replicas: int,
+                 pp_stages: int, batch: int, clock: str, rounds: int,
+                 busy_s: Sequence[float], makespan_s: float,
+                 bubble_fraction: float = 0.0) -> FleetReport:
+    """Assemble the fleet report from an engine run's accounting."""
+    lat = latency_report(done)
+    return FleetReport(
+        mode=mode, replicas=replicas, pp_stages=pp_stages, batch=batch,
+        clock=clock, n_done=lat["n"], n_rejected=len(rejected),
+        rounds=rounds, throughput=(lat["n"] / makespan_s
+                                   if makespan_s > 0 else 0.0),
+        p50_ms=lat["p50_ms"], p95_ms=lat["p95_ms"], makespan_s=makespan_s,
+        utilization=[b / makespan_s if makespan_s > 0 else 0.0
+                     for b in busy_s],
+        bubble_fraction=bubble_fraction)

@@ -1,0 +1,118 @@
+"""Request router for the distributed serving engine.
+
+One router fronts N replica queues (the PipeCNN cascade replicated over
+the mesh "data" axis). Policy:
+
+  * **least-loaded dispatch** — an arriving request goes to the replica
+    with the smallest backlog (queue depth; ties break to the lowest
+    replica id, keeping dispatch deterministic for the simulated clock);
+  * **admission control** — when every replica's queue has reached the
+    SLO bound (``max_queue`` outstanding requests), the request is
+    REJECTED rather than enqueued: a bounded queue bounds worst-case
+    queueing delay, which is what an SLO on p95 latency requires. With
+    ``max_queue=0`` admission is unbounded (no rejections).
+
+``MicroBatcher`` (the per-replica FIFO that pads drained requests to the
+plan batch) moved here from ``repro.launch.serve_cnn``, which re-exports
+it; ``next_batch`` on an empty queue is a well-formed no-op
+(``([], None, 0)``), so gang-scheduled rounds can drain idle replicas
+uniformly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One inference request: an image plus its (simulated) arrival time."""
+    rid: int
+    image: np.ndarray
+    t_arrival: float
+
+
+@dataclass
+class Completion:
+    rid: int
+    pred: int
+    t_arrival: float
+    t_done: float
+    replica: int = 0
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_arrival
+
+
+class MicroBatcher:
+    """FIFO queue that drains requests in plan-batch-sized chunks.
+
+    ``next_batch`` pops up to ``plan_batch`` requests and zero-pads the
+    image tensor to exactly ``plan_batch`` rows — the serving analogue of
+    the kernel's own batch padding: one compiled shape, garbage rows
+    computed and dropped. Returns (requests, images, n_real); an empty
+    queue returns ``([], None, 0)`` (a well-formed empty drain).
+    """
+
+    def __init__(self, plan_batch: int):
+        self.plan_batch = plan_batch
+        self._q: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self._q.append(req)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def next_batch(self) -> Tuple[List[Request], Optional[jnp.ndarray], int]:
+        take, self._q = self._q[:self.plan_batch], self._q[self.plan_batch:]
+        if not take:
+            return [], None, 0
+        imgs = np.stack([r.image for r in take])
+        n_real = len(take)
+        if n_real < self.plan_batch:
+            pad = np.zeros((self.plan_batch - n_real,) + imgs.shape[1:],
+                           imgs.dtype)
+            imgs = np.concatenate([imgs, pad])
+        return take, jnp.asarray(imgs), n_real
+
+
+class Router:
+    """Least-loaded dispatch over N replica queues with admission control."""
+
+    def __init__(self, n_replicas: int, plan_batch: int, *,
+                 max_queue: int = 0):
+        if n_replicas < 1:
+            raise ValueError("need at least one replica")
+        self.queues = [MicroBatcher(plan_batch) for _ in range(n_replicas)]
+        self.max_queue = max_queue
+        self.rejected: List[Request] = []
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.queues)
+
+    def backlog(self) -> int:
+        return sum(len(q) for q in self.queues)
+
+    def dispatch(self, req: Request) -> bool:
+        """Route one request; False = rejected by admission control."""
+        r = min(range(len(self.queues)), key=lambda i: (len(self.queues[i]), i))
+        if self.max_queue and len(self.queues[r]) >= self.max_queue:
+            self.rejected.append(req)
+            return False
+        self.queues[r].submit(req)
+        return True
+
+    def drain_round(self):
+        """Pop one (padded) micro-batch per replica — a gang round.
+
+        Returns a list of ``(replica_id, requests, images, n_real)``;
+        idle replicas appear with ``(r, [], None, 0)`` so the caller can
+        keep the round's super-batch shape fixed.
+        """
+        return [(r,) + q.next_batch() for r, q in enumerate(self.queues)]

@@ -133,6 +133,44 @@ def test_pipeline_parallel_forward_matches_sequential():
     """)
 
 
+def test_pipeline_forward_stages_heterogeneous_matches_sequential():
+    """The indexed-stage pipeline entry point (stage_fn dispatches on the
+    traced stage index via lax.switch) with per-stage weights of
+    DIFFERENT shapes riding a canonical flat buffer, plus the hybrid
+    dp_axis: both must reproduce the sequential forward."""
+    run_in_mesh_subprocess("""
+        from repro.parallel.pipeline_par import pipeline_forward_stages
+        from repro.launch.mesh import compat_make_mesh
+        S, B, D = 4, 16, 8
+        widths = [D, 12, 6, 10, D]          # heterogeneous stage widths
+        maxw = max(widths)
+        ws = [jax.random.normal(jax.random.key(i), (widths[i],
+                                                    widths[i + 1])) * 0.3
+              for i in range(S)]
+        x = jax.random.normal(jax.random.key(9), (B, D))
+        def branch(i):
+            def f(buf):
+                h = jnp.tanh(buf[:, :widths[i]] @ ws[i])
+                return jnp.pad(h, ((0, 0), (0, maxw - h.shape[1])))
+            return f
+        branches = [branch(i) for i in range(S)]
+        def stage_fn(idx, h):
+            return jax.lax.switch(idx, branches, h)
+        want = x
+        for w in ws:
+            want = jnp.tanh(want @ w)
+        xpad = jnp.pad(x, ((0, 0), (0, maxw - D)))
+        for mesh_shape, dp in (((1, 4), None), ((2, 4), "data")):
+            mesh = compat_make_mesh(mesh_shape, ("data", "pipe"))
+            got = pipeline_forward_stages(stage_fn, xpad, mesh,
+                                          axis="pipe", n_microbatches=4,
+                                          dp_axis=dp)
+            np.testing.assert_allclose(np.asarray(got[:, :D]),
+                                       np.asarray(want),
+                                       rtol=1e-4, atol=1e-4)
+    """)
+
+
 def test_sharded_train_step_matches_single_device():
     """The same train_step under a 8-device mesh must produce the same
     loss as single-device execution (GSPMD is semantics-preserving)."""
