@@ -8,7 +8,11 @@ future PRs can diff conv-pipeline performance machine-readably.
 overwriting BENCH_conv.json it compares every freshly modelled layer row
 (``*_model``, deterministic roofline times) against the committed
 trajectory at PATH and exits non-zero if any layer regressed more than
-10%. Measured (wall-clock) rows are noisy and are NOT gated.
+10%. Measured (wall-clock) rows are noisy and are NOT gated. The
+compile phase is tracked too (PR 5): ``{arch}_compile_sweeps_model``
+gates the deterministic DSE sweep count of a cold
+``repro.pipeline.compile_cnn``, and the warm-recompile row must be
+sweep-free (enforced every run, like the int8/fleet invariants).
 
 Run: PYTHONPATH=src python -m benchmarks.run [--fast]
                                              [--check-against BENCH_conv.json]
@@ -255,6 +259,66 @@ def fleet_bench(fast: bool) -> dict:
     return rows
 
 
+def compile_bench(fast: bool) -> dict:
+    """Compile-phase trajectory rows (PR 5: the compile-once API).
+
+    The compile phase (``repro.pipeline.compile_cnn``) is now a real
+    pipeline stage with its own regression surface, so it gets its own
+    rows next to the model rows:
+
+    * ``{arch}_compile_cold`` / ``{arch}_compile_warm`` — measured
+      wall-time of a cold compile (full DSE sweep) and a warm recompile
+      (registry hits only), with the sweep/hit counters attached.
+      Wall-clock rows are NOT gated (CI machines are noisy).
+    * ``{arch}_compile_sweeps_model`` — the DETERMINISTIC compile cost:
+      how many DSE sweeps a cold compile runs (``us_per_call`` carries
+      the count; see ``unit``). Under the perf gate: a PR that makes the
+      compile path sweep >10% more shapes fails, exactly like a modelled
+      layer-time regression.
+    * the warm row also records ``sweep_free`` — a warm recompile (and
+      therefore a compile from a committed ``save_plan`` table) must do
+      ZERO sweeps; main() enforces it like the int8/fleet invariants.
+    """
+    from repro.configs import get_config
+    from repro.kernels import autotune
+    from repro.models.cnn import init_cnn_params
+    from repro.pipeline import ExecutionSpec, Serving, compile_cnn
+
+    import jax
+
+    rows: dict = {}
+    for name in ("alexnet",) if fast else ("alexnet", "vgg16"):
+        cfg = get_config(name)
+        spec = ExecutionSpec(serving=Serving(batch=8, clock="modeled"))
+        params = init_cnn_params(jax.random.key(0), cfg)  # not timed
+
+        autotune.clear_registry()
+        autotune.reset_sweep_stats()
+        t0 = time.perf_counter()
+        compiled = compile_cnn(cfg, spec, params)
+        cold_us = (time.perf_counter() - t0) * 1e6
+        cold = autotune.sweep_stats()
+        n_sweeps = cold["conv_sweeps"] + cold["gemm_sweeps"]
+
+        autotune.reset_sweep_stats()
+        t0 = time.perf_counter()
+        compile_cnn(cfg, spec, params)
+        warm_us = (time.perf_counter() - t0) * 1e6
+        warm = autotune.sweep_stats()
+
+        plan_rows = compiled.plan_table.summary()
+        rows[f"{name}_compile_cold"] = {
+            "us_per_call": cold_us, "compile": dict(cold, **plan_rows)}
+        rows[f"{name}_compile_warm"] = {
+            "us_per_call": warm_us, "compile": dict(warm),
+            "sweep_free": warm["conv_sweeps"] + warm["gemm_sweeps"] == 0}
+        rows[f"{name}_compile_sweeps_model"] = {
+            "us_per_call": float(n_sweeps),
+            "unit": "dse_sweeps (deterministic count, not wall time)",
+            "compile": dict(cold, **plan_rows)}
+    return rows
+
+
 def check_against(path: str, rows: dict, *, tol: float = 0.10) -> tuple:
     """Compare modelled layer rows against a committed trajectory.
 
@@ -319,6 +383,8 @@ def main() -> None:
 
     conv_rows = conv_bench(args.fast)
     conv_rows.update(fleet_bench(args.fast))
+    # LAST: compile_bench clears the plan registry to time cold compiles
+    conv_rows.update(compile_bench(args.fast))
     # the int8 acceptance invariant is deterministic (pure cost model),
     # so it is enforced on EVERY run, gate or not: int8 must model
     # <= 0.5x fp32 on every bandwidth-bound conv layer
@@ -337,6 +403,14 @@ def main() -> None:
         f"single-replica throughput (acceptance: >= 3x)"
         for name, row in conv_rows.items()
         if name.startswith("fleet_vs_single(") and not row["ge_3x_dp4"]]
+    # and the compile-once acceptance (PR 5): a warm recompile — and
+    # therefore a compile seeded from a committed save_plan table —
+    # must perform ZERO DSE sweeps
+    violations += [
+        f"{name}: warm recompile ran DSE sweeps ({row['compile']}); the "
+        f"plan registry/table must make recompiles sweep-free"
+        for name, row in conv_rows.items()
+        if name.endswith("_compile_warm") and not row["sweep_free"]]
     # gate BEFORE writing: the committed file is the baseline, and a
     # failing gate must NOT overwrite it (a rerun would then compare the
     # regressed values against themselves and pass)
@@ -362,6 +436,11 @@ def main() -> None:
                 f = row["fleet"]
                 derived = (f"fleet={f['mode']}xR{f['replicas']}"
                            f"xS{f['pp_stages']}")
+            elif "compile" in row:
+                c = row["compile"]
+                derived = (f"compile=sweeps{c['conv_sweeps']}"
+                           f"+{c['gemm_sweeps']}"
+                           f"_hits{c['conv_hits']}+{c['gemm_hits']}")
             else:
                 derived = "ref"
             print(f"{name},{row['us_per_call']:.0f},{derived}")

@@ -39,25 +39,24 @@ args = ap.parse_args()
 cfg = get_config(args.arch).smoke()
 
 if isinstance(cfg, CNNConfig):
-    # ---- CNN serving path: the batch-pipelined conv grid end to end ----
-    import dataclasses
-
+    # ---- CNN serving path: compile once, then the batch-pipelined conv
+    # grid end to end (repro.pipeline is the entry point) ----
     from repro.launch.serve_cnn import (default_request_count,
-                                        latency_report, serve,
                                         synthetic_requests)
     from repro.models.cnn import init_cnn_params
+    from repro.pipeline import ExecutionSpec, Serving, compile_cnn
 
-    cfg = dataclasses.replace(cfg, serve_batch=args.batch)
     params = init_cnn_params(jax.random.key(0), cfg)
     n_req = default_request_count(args.batch)
     reqs = synthetic_requests(n_req, cfg.input_hw, cfg.input_ch, rate=200.0)
-    done = serve(cfg, params, reqs, batch=args.batch, use_pallas=True)
-    assert len(done) == n_req
-    rep = latency_report(done)
+    spec = ExecutionSpec(serving=Serving(batch=args.batch))
+    compiled = compile_cnn(cfg, spec, params)
+    rep = compiled.serve(reqs)
+    assert len(rep.completions) == n_req
     print(f"arch={args.arch} (CNN smoke scale, batch-folded conv grid)")
     print(f"served {n_req} requests @ micro-batch {args.batch}: "
-          f"{rep['throughput']:.0f} img/s, p50 {rep['p50_ms']:.1f} ms, "
-          f"p95 {rep['p95_ms']:.1f} ms")
+          f"{rep.throughput:.0f} img/s, p50 {rep.p50_ms:.1f} ms, "
+          f"p95 {rep.p95_ms:.1f} ms")
     print("serve_batched OK")
     sys.exit(0)
 if cfg.frontend:

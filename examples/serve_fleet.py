@@ -1,13 +1,15 @@
-"""Distributed CNN serving demo: one router, three execution modes.
+"""Distributed CNN serving demo: one compile per placement, one router.
 
-Runs the same synthetic request stream through the serving engine
-(``repro.serve.ServeEngine``) as
+Compiles the same network three times through the compile-once API
+(``repro.pipeline.compile_cnn``) — the spec's Placement sub-spec is the
+ONLY thing that changes — and drains the same synthetic request stream
+through each ``CompiledCNN``:
 
   1. a single replica (the PR 2 baseline),
   2. 4 data-parallel replicas sharded over the mesh "data" axis,
   3. hybrid 2 replicas x 4 pipeline stages (DP x PP on the 2-D mesh),
 
-and prints each fleet report. Forces 8 host devices itself, so it runs
+printing each fleet report. Forces 8 host devices itself, so it runs
 anywhere:  PYTHONPATH=src python examples/serve_fleet.py
 """
 import os
@@ -17,18 +19,15 @@ os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
 sys.path.insert(0, "src")
 
-import dataclasses
-
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.launch.serve_cnn import default_request_count, synthetic_requests
 from repro.models.cnn import init_cnn_params
-from repro.serve import ServeEngine
+from repro.pipeline import ExecutionSpec, Placement, Serving, compile_cnn
 
 BATCH = 8
-cfg = dataclasses.replace(get_config("alexnet").smoke(), serve_batch=BATCH)
+cfg = get_config("alexnet").smoke()
 params = init_cnn_params(jax.random.key(0), cfg)
 n_req = default_request_count(BATCH, replicas=4)
 # a deliberately bursty arrival rate: queues build up, so the modes
@@ -38,22 +37,24 @@ requests = synthetic_requests(n_req, cfg.input_hw, cfg.input_ch, rate=1e6)
 print(f"serving {n_req} requests (alexnet smoke, micro-batch {BATCH}) "
       f"on {jax.device_count()} host devices\n")
 preds = {}
-for label, kw in (
-        ("single replica", dict(replicas=1)),
-        ("4 DP replicas over mesh 'data'", dict(replicas=4)),
+for label, placement in (
+        ("single replica", Placement()),
+        ("4 DP replicas over mesh 'data'", Placement(replicas=4)),
         ("hybrid 2 replicas x 4 pipeline stages",
-         dict(replicas=2, pp_stages=4))):
-    engine = ServeEngine(cfg, params, batch=BATCH, clock="modeled", **kw)
-    done, rep = engine.serve(requests)
-    assert len(done) == n_req
-    preds[label] = {c.rid: c.pred for c in done}
+         Placement(replicas=2, pp_stages=4))):
+    spec = ExecutionSpec(placement=placement,
+                         serving=Serving(batch=BATCH, clock="modeled"))
+    compiled = compile_cnn(cfg, spec, params)
+    rep = compiled.serve(requests)
+    assert len(rep.completions) == n_req
+    preds[label] = {c.rid: c.pred for c in rep.completions}
     extra = ""
-    if engine.stage_plan is not None:
-        sp = engine.stage_plan
+    if compiled.stage_plan is not None:
+        sp = compiled.stage_plan
         extra = (f"\n    stages: " + " | ".join(
             f"{len(s.groups)}g {s.t_model * 1e6:.0f}us"
             for s in sp.stages) + f"  (balance {sp.balance:.2f}, "
-            f"M={engine.n_micro})")
+            f"M={compiled.engine.n_micro})")
     print(f"  {label}:\n    {rep.summary()}{extra}")
 
 # every mode must classify identically — DP shards the batch, PP slices

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field, replace
-from typing import Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
 # LM-family model configuration
@@ -208,6 +208,28 @@ class ConvLayer:
     fuse_pool: Optional["ConvLayer"] = None
 
 
+def fuse_groups(layers: Sequence["ConvLayer"]) -> List[Tuple[int, ...]]:
+    """Group layer indices into PipeCNN pipeline stages.
+
+    conv immediately followed by pool -> fused (conv+pool) kernel
+    launch; lrn stays standalone (off-pipeline, as in the paper); fc
+    standalone. THE one grouping implementation: ``models.cnn.fuse_plan``
+    executes it and ``CNNConfig.__post_init__`` validates against it, so
+    the two can never disagree.
+    """
+    plan: List[Tuple[int, ...]] = []
+    i = 0
+    while i < len(layers):
+        if (layers[i].kind == "conv" and i + 1 < len(layers)
+                and layers[i + 1].kind == "pool"):
+            plan.append((i, i + 1))
+            i += 2
+        else:
+            plan.append((i,))
+            i += 1
+    return plan
+
+
 @dataclass(frozen=True)
 class CNNConfig:
     name: str
@@ -226,6 +248,10 @@ class CNNConfig:
     # "int8" declares the model must be served from QuantizedCNNParams —
     # cnn_forward raises if handed raw fp32 params (calibrate first).
     quant: str = "none"
+    # calibration images the serving path synthesises when quant="int8"
+    # and no QuantizedCNNParams / calibration batch is handed in; 0 means
+    # "no calibration source" and is rejected together with quant="int8"
+    calib: int = 8
     # --- spatial tiling / DSE (the Fig. 7 sweep, per layer) ---
     oh_blk: int = 0                   # line-buffer depth in conv rows (0=full)
     autotune: bool = True             # per-layer (b,c,m,oh)_blk DSE
@@ -241,6 +267,49 @@ class CNNConfig:
     serve_microbatches: int = 0       # GPipe microbatches per round (0=auto)
     max_queue: int = 0                # admission bound per replica queue
     #                                   (0 = unbounded, no rejections)
+
+    def __post_init__(self):
+        """Cross-validate the knob combinations at CONSTRUCTION time.
+
+        These used to fail deep inside pallas tracing (a shape error five
+        frames into an index map) or silently misconfigure a run; the
+        config is the first place every entry point passes through, so it
+        is where contradictions are cheapest to reject.
+        """
+        if self.quant not in ("none", "int8"):
+            raise ValueError(
+                f"CNNConfig.quant={self.quant!r}: expected 'none' or 'int8'")
+        if self.quant == "int8" and self.calib <= 0:
+            raise ValueError(
+                "CNNConfig.quant='int8' needs a calibration source: set "
+                "calib > 0 (the synthetic calibration-batch size; unused "
+                "— but still required — when pre-calibrated "
+                "QuantizedCNNParams are handed to compile/forward)")
+        if self.replicas < 1 or self.pp_stages < 1:
+            raise ValueError(
+                f"CNNConfig.replicas={self.replicas} / "
+                f"pp_stages={self.pp_stages}: both must be >= 1")
+        n_groups = self.n_fuse_groups
+        if self.layers and self.pp_stages > n_groups:
+            raise ValueError(
+                f"CNNConfig.pp_stages={self.pp_stages} exceeds the "
+                f"{n_groups} indivisible fusion groups of {self.name!r}; "
+                f"a pipeline stage cannot be finer than one fused "
+                f"conv(+pool) launch — lower pp_stages to <= {n_groups}")
+        if self.b_blk > 1 and self.serve_batch % self.b_blk:
+            raise ValueError(
+                f"CNNConfig.serve_batch={self.serve_batch} is not a "
+                f"multiple of b_blk={self.b_blk}: the serving queue pads "
+                f"requests to serve_batch, so the conv grid's image block "
+                f"must divide it (pick b_blk in "
+                f"{[d for d in range(1, self.serve_batch + 1) if self.serve_batch % d == 0]})")
+
+    @property
+    def n_fuse_groups(self) -> int:
+        """Count of indivisible pipeline fusion groups (the grouping
+        ``models.cnn.fuse_plan`` executes — one shared implementation,
+        :func:`fuse_groups`)."""
+        return len(fuse_groups(self.layers))
 
     def smoke(self) -> "CNNConfig":
         """Shrink channel counts for CPU tests (same topology)."""

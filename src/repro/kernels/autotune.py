@@ -31,10 +31,11 @@ trajectory file (``BENCH_conv.json``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 from repro.core.roofline import (MXU_DIM, VMEM_BYTES, mxu_utilization,
                                  time_bounds)
@@ -392,6 +393,60 @@ def best_gemm_plan(shape: GemmShape,
 
 _GEMM_REGISTRY: Dict[Tuple[GemmShape, str, int], GemmPlan] = {}
 
+# DSE accounting: how many sweeps actually ran vs how many lookups the
+# registry absorbed. This is the compile-phase "instruction count" —
+# deterministic (unlike wall time), so benchmarks/run.py can gate on it
+# and tests can assert that a loaded plan table skips the sweep entirely.
+_SWEEP_STATS = {"conv_sweeps": 0, "conv_hits": 0,
+                "gemm_sweeps": 0, "gemm_hits": 0}
+
+
+def sweep_stats() -> Dict[str, int]:
+    """A snapshot of the DSE sweep/cache-hit counters."""
+    return dict(_SWEEP_STATS)
+
+
+def reset_sweep_stats() -> None:
+    for k in _SWEEP_STATS:
+        _SWEEP_STATS[k] = 0
+
+
+# Active lookup recorders: every get_plan / get_gemm_plan resolution
+# (hit OR sweep) is appended to each open recorder in snapshot format.
+# ``repro.pipeline.compile_cnn`` opens one around the whole compile, so
+# the resulting plan table contains EVERY key the compiled pipeline will
+# ever look up — including the stage planner's microbatch sweep — and a
+# table loaded into a fresh process satisfies all of them without one
+# sweep.
+_RECORDERS: List[Dict[str, list]] = []
+
+
+@contextlib.contextmanager
+def record_lookups() -> Iterator[Dict[str, list]]:
+    """Record every plan lookup inside the block.
+
+    Yields a dict ``{"conv": [rows...], "gemm": [rows...]}`` in the same
+    record format as :func:`registry_snapshot` (duplicates included;
+    callers dedupe).
+    """
+    rows: Dict[str, list] = {"conv": [], "gemm": []}
+    _RECORDERS.append(rows)
+    try:
+        yield rows
+    finally:
+        # remove by IDENTITY: nested recorders hold equal dict contents
+        # (every row goes to all open recorders), so list.remove's
+        # equality match would drop the wrong one
+        _RECORDERS[:] = [r for r in _RECORDERS if r is not rows]
+
+
+def _record(kind: str, shape, backend: str, vmem_budget: int, plan) -> None:
+    if _RECORDERS:
+        row = {"shape": dataclasses.asdict(shape), "backend": backend,
+               "vmem_budget": vmem_budget, "plan": plan.to_dict()}
+        for rec in _RECORDERS:
+            rec[kind].append(row)
+
 
 def get_gemm_plan(shape: GemmShape, *, vmem_budget: int = VMEM_BYTES,
                   backend: str = "tpu") -> GemmPlan:
@@ -399,8 +454,12 @@ def get_gemm_plan(shape: GemmShape, *, vmem_budget: int = VMEM_BYTES,
     key = (shape, backend, vmem_budget)
     plan = _GEMM_REGISTRY.get(key)
     if plan is None:
+        _SWEEP_STATS["gemm_sweeps"] += 1
         plan = best_gemm_plan(shape, vmem_budget)
         _GEMM_REGISTRY[key] = plan
+    else:
+        _SWEEP_STATS["gemm_hits"] += 1
+    _record("gemm", shape, backend, vmem_budget, plan)
     return plan
 
 
@@ -437,8 +496,12 @@ def get_plan(shape: ConvShape, *, vmem_budget: int = VMEM_BYTES,
     key = (shape, backend, vmem_budget)
     plan = _REGISTRY.get(key)
     if plan is None:
+        _SWEEP_STATS["conv_sweeps"] += 1
         plan = best_plan(shape, vmem_budget)
         _REGISTRY[key] = plan
+    else:
+        _SWEEP_STATS["conv_hits"] += 1
+    _record("conv", shape, backend, vmem_budget, plan)
     return plan
 
 
@@ -476,3 +539,32 @@ def registry_snapshot() -> List[dict]:
 def dump_registry(path: str) -> None:
     with open(path, "w") as f:
         json.dump(registry_snapshot(), f, indent=1)
+
+
+def seed_registry(conv_rows: List[dict] = (),
+                  gemm_rows: List[dict] = ()) -> int:
+    """Insert serialised plan records back into the process registries.
+
+    The inverse of :func:`registry_snapshot` / :func:`gemm_registry_snapshot`
+    — ``repro.pipeline`` uses it to make a committed plan table (the
+    JSON a previous compile saved) satisfy every ``get_plan`` /
+    ``get_gemm_plan`` lookup without running a sweep. Records whose key
+    is already present are left alone (the registry stays authoritative);
+    returns the number of records inserted. Shape dicts missing newer
+    fields deserialise with the dataclass defaults, exactly like old
+    BENCH_conv.json records.
+    """
+    inserted = 0
+    for row in conv_rows:
+        key = (ConvShape(**row["shape"]), row["backend"],
+               row["vmem_budget"])
+        if key not in _REGISTRY:
+            _REGISTRY[key] = ConvPlan(**row["plan"])
+            inserted += 1
+    for row in gemm_rows:
+        gkey = (GemmShape(**row["shape"]), row["backend"],
+                row["vmem_budget"])
+        if gkey not in _GEMM_REGISTRY:
+            _GEMM_REGISTRY[gkey] = GemmPlan(**row["plan"])
+            inserted += 1
+    return inserted

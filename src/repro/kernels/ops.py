@@ -7,8 +7,9 @@ here (kv heads repeated to q heads before the MHA kernel).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
-from typing import Optional
+from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,12 +21,54 @@ from repro.kernels.lrn_pwl import lrn_pwl
 from repro.kernels.matmul_pipe import matmul_pipe
 from repro.quant import ref as quant_ref
 
-_INTERPRET = True          # flipped to False by launch scripts on real TPU
+_INTERPRET = True          # True everywhere but a real TPU (see interpret_mode)
+
+
+@contextlib.contextmanager
+def interpret_mode(flag: bool = True) -> Iterator[None]:
+    """Scoped interpret-vs-hardware selection for every kernel wrapper.
+
+    ``with interpret_mode(False): ...`` runs the Pallas kernels on real
+    hardware inside the block and restores the previous mode on exit
+    (exception-safe) — the scoped replacement for the mutable
+    ``set_interpret`` global. ``repro.pipeline.CompiledCNN`` threads its
+    spec's ``interpret`` field through this manager around every
+    forward/serve, so a compiled model can't leak the mode it was
+    compiled for into unrelated callers.
+
+    NB: the flag is read at TRACE time — a jit cache entry traced under
+    one mode is not retraced when the mode changes, exactly as with the
+    old global. Scoping the flip (rather than setting it process-wide)
+    is what keeps that cache behaviour predictable.
+    """
+    global _INTERPRET
+    prev = _INTERPRET
+    _INTERPRET = flag
+    try:
+        yield
+    finally:
+        _INTERPRET = prev
 
 
 def set_interpret(flag: bool) -> None:
+    """Deprecated shim: process-wide, unscoped version of
+    :func:`interpret_mode`. Kept so existing launch scripts keep working;
+    new code should use the context manager."""
     global _INTERPRET
     _INTERPRET = flag
+
+
+def get_interpret() -> bool:
+    """The interpret flag kernels will trace with right now."""
+    return _INTERPRET
+
+
+# the public kernel-wrapper contract — tests/test_api_surface.py snapshots
+# this list so a refactor cannot silently drop or rename an entry point
+__all__ = [
+    "attention", "fc", "fc_q", "fused_conv", "fused_conv_q",
+    "get_interpret", "interpret_mode", "lrn", "set_interpret",
+]
 
 
 @functools.partial(jax.jit, static_argnames=(

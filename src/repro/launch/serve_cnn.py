@@ -1,12 +1,16 @@
-"""CNN serving launcher — a thin CLI over ``repro.serve``.
+"""CNN serving launcher — a thin CLI over ``repro.pipeline``.
 
 PipeCNN is an inference accelerator; this launcher is its serving
 scenario at fleet scale. PR 2 added the single-replica micro-batching
 queue (requests padded to the autotuned plan batch, batched-FC weight
 reuse); PR 3 added fixed-point serving (``--quant int8``); PR 4 moved
 the queue/clock machinery into the distributed engine
-(``repro.serve.ServeEngine``) and this file became argument parsing
-plus a report printer. The engine's three modes map to two flags:
+(``repro.serve.ServeEngine``); PR 5 made the flags an
+:class:`~repro.pipeline.ExecutionSpec` compiled ONCE into a
+:class:`~repro.pipeline.CompiledCNN` (calibration, DSE plans, stage
+partition and mesh all resolved before the first request), so this file
+is argument parsing plus a report printer. The three execution modes
+map to two flags:
 
   * ``--replicas N``  — N data-parallel replicas over the mesh "data"
     axis (each runs the full batched/int8 Pallas pipeline);
@@ -26,17 +30,15 @@ re-exported from ``repro.serve`` for backwards compatibility.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 from typing import List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.core.config import CNNConfig, flops_per_image
 from repro.kernels import autotune
-from repro.models.cnn import init_cnn_params
+from repro.pipeline import (ExecutionSpec, Placement, Precision, Serving,
+                            Tiling, compile_cnn)
 from repro.serve import (Completion, MicroBatcher, Request,  # noqa: F401
                          ServeEngine, latency_report)
 
@@ -59,16 +61,35 @@ def serve(cfg: CNNConfig, params, requests: List[Request], *,
           batch: int, use_pallas: bool, replicas: int = 1,
           pp_stages: int = 1, clock: str = "measured",
           max_queue: int = 0) -> List[Completion]:
-    """Run the micro-batched serving loop (single replica by default).
-
-    Kept for API compatibility with the PR 2 launcher: a thin wrapper
-    over :class:`repro.serve.ServeEngine` returning just completions.
+    """DEPRECATION SHIM (the PR 2 launcher API): compile-once, serve,
+    return just the completions. New code should call
+    ``repro.pipeline.compile_cnn(cfg, spec, params).serve(requests)``.
     """
-    engine = ServeEngine(cfg, params, batch=batch, replicas=replicas,
-                         pp_stages=pp_stages, use_pallas=use_pallas,
-                         clock=clock, max_queue=max_queue)
-    done, _ = engine.serve(requests)
-    return done
+    from repro.quant.calibrate import QuantizedCNNParams
+    if cfg.quant == "int8" and not isinstance(params, QuantizedCNNParams):
+        # the legacy engine errored at first-round trace for this
+        # combination; keep it an error rather than silently calibrating
+        # on synthetic noise (compile_cnn's CLI behaviour)
+        raise ValueError(
+            "cfg.quant='int8' but params are not QuantizedCNNParams; "
+            "run repro.quant.calibrate_cnn first, or use "
+            "repro.pipeline.compile_cnn which owns calibration")
+    # lift the cfg's precision/tiling knobs intact; placement/serving
+    # come from this function's own arguments (matching the legacy
+    # engine, which also ignored cfg.serve_microbatches here) — building
+    # the spec from exactly the fields that will run means validation
+    # can't trip on legacy knobs a plain serve never consults
+    spec = ExecutionSpec(
+        precision=Precision(dtype=cfg.dtype, quant=cfg.quant,
+                            calib=cfg.calib),
+        tiling=Tiling(autotune=cfg.autotune, vmem_budget=cfg.vmem_budget,
+                      vec_size=cfg.vec_size, cu_num=cfg.cu_num,
+                      oh_blk=cfg.oh_blk, b_blk=cfg.b_blk),
+        placement=Placement(replicas=replicas, pp_stages=pp_stages),
+        serving=Serving(batch=batch, clock=clock, max_queue=max_queue),
+        use_pallas=use_pallas)
+    rep = compile_cnn(cfg, spec, params).serve(requests)
+    return rep.completions
 
 
 def default_request_count(batch: int, replicas: int = 1) -> int:
@@ -124,72 +145,70 @@ def main() -> None:
         cfg = cfg.smoke()
     replicas = args.replicas or cfg.replicas
     pp_stages = args.pp_stages or cfg.pp_stages
-    # the micro-batch IS the batched-FC block: classifier weight tiles
-    # amortize over exactly the images the queue hands us
-    cfg = dataclasses.replace(cfg, serve_batch=args.batch, quant=args.quant,
-                              replicas=replicas, pp_stages=pp_stages)
     n_req = args.requests or default_request_count(args.batch, replicas)
-
-    key = jax.random.key(0)
-    params = init_cnn_params(key, cfg)
-    requests = synthetic_requests(n_req, cfg.input_hw, cfg.input_ch,
-                                  args.rate)
     use_pallas = not args.no_pallas
 
+    # the flags ARE the spec: one validated object, compiled once —
+    # contradictions (e.g. microbatches without stages) fail here, not
+    # five frames into pallas tracing. The cfg's own dtype/tiling knobs
+    # are lifted intact (the spec is authoritative, so defaulting them
+    # would silently overwrite a customized config)
+    spec = ExecutionSpec(
+        precision=Precision(dtype=cfg.dtype, quant=args.quant,
+                            calib=args.calib),
+        tiling=Tiling(autotune=cfg.autotune, vmem_budget=cfg.vmem_budget,
+                      vec_size=cfg.vec_size, cu_num=cfg.cu_num,
+                      oh_blk=cfg.oh_blk, b_blk=cfg.b_blk),
+        placement=Placement(replicas=replicas, pp_stages=pp_stages,
+                            microbatches=args.microbatches),
+        serving=Serving(batch=args.batch, clock=args.clock,
+                        max_queue=args.max_queue),
+        use_pallas=use_pallas)
+    compiled = compile_cnn(cfg, spec)
+    requests = synthetic_requests(n_req, cfg.input_hw, cfg.input_ch,
+                                  args.rate)
+
     if args.quant == "int8":
-        # offline calibration (the PipeCNN step that fixes the fixed-point
-        # positions): a synthetic batch from the serving distribution
-        from repro.quant import calibrate_cnn
-        rng = np.random.default_rng(123)
-        calib = jnp.asarray(rng.standard_normal(
-            (args.calib, cfg.input_hw, cfg.input_hw, cfg.input_ch)
-            ).astype(np.float32))
-        params = calibrate_cnn(params, calib, cfg)
-        n_conv = sum(1 for l in params.layers
+        qp = compiled.params        # calibrated during the compile phase
+        n_conv = sum(1 for l in qp.layers
                      if l is not None and l.kind == "conv")
         print(f"[serve_cnn] int8 calibration: {args.calib} images, "
               f"{n_conv} conv layers quantized (per-channel weights, "
               f"per-tensor activations); input scale "
-              f"{params.in_scale:.3g}")
-
-    engine = ServeEngine(cfg, params, batch=args.batch, replicas=replicas,
-                         pp_stages=pp_stages,
-                         n_microbatches=args.microbatches,
-                         use_pallas=use_pallas, clock=args.clock,
-                         max_queue=args.max_queue)
-    if engine.stage_plan is not None:
-        sp = engine.stage_plan
+              f"{qp.in_scale:.3g}")
+    if compiled.stage_plan is not None:
+        sp = compiled.stage_plan
+        engine = compiled.engine
         print(f"[serve_cnn] {pp_stages} pipeline stages "
               f"(balance {sp.balance:.2f}, bubble "
               f"{sp.bubble(engine.n_micro):.0%} at M={engine.n_micro}): "
               + " | ".join(f"s{i}:{len(s.groups)}g "
                            f"{s.t_model * 1e6:.0f}us"
                            for i, s in enumerate(sp.stages)))
-    done, rep = engine.serve(requests)
-    assert len(done) + rep.n_rejected == n_req, (len(done), n_req)
-    gops = flops_per_image(cfg) * rep.throughput / 1e9
+    rep = compiled.serve(requests)
+    assert len(rep.completions) + rep.n_rejected == n_req, \
+        (len(rep.completions), n_req)
+    gops = flops_per_image(compiled.cfg) * rep.throughput / 1e9
 
     print(f"[serve_cnn] {args.arch}{' (smoke)' if args.smoke else ''}: "
           f"{n_req} requests @ micro-batch {args.batch}, mode "
-          f"{engine.mode} (R={replicas}, S={pp_stages}; "
+          f"{compiled.mode} (R={replicas}, S={pp_stages}; "
           f"{'pallas' if use_pallas else 'xla-ref'} path"
           f"{', int8' if args.quant == 'int8' else ''})")
     print(f"[serve_cnn] {rep.summary()}")
     print(f"[serve_cnn] aggregate {gops:.2f} GOPS at the reported "
           f"throughput")
     if use_pallas and cfg.autotune:
-        dtype = "int8" if args.quant == "int8" else cfg.dtype
-        rows = [r for r in autotune.registry_snapshot()
-                if r["shape"]["b"] in (args.batch, engine.mb)
-                and r["shape"]["dtype"] == dtype]
+        tbl = compiled.plans()
+        dtype = spec.run_dtype
+        rows = [r for r in tbl.conv if r["shape"]["dtype"] == dtype]
         picked = sorted({(r["plan"]["b_blk"], r["plan"]["c_blk"],
                           r["plan"]["m_blk"], r["plan"]["oh_blk"])
                          for r in rows})
-        gemm = [r for r in autotune.gemm_registry_snapshot()
-                if r["shape"]["dtype"] == dtype]
-        print(f"[serve_cnn] {len(rows)} conv plans + {len(gemm)} GEMM "
-              f"plans tuned ({dtype}); conv (b,c,m,oh)_blk points in "
-              f"use: {picked}")
+        gemm = [r for r in tbl.gemm if r["shape"]["dtype"] == dtype]
+        print(f"[serve_cnn] plan table: {len(rows)} conv plans + "
+              f"{len(gemm)} GEMM plans compiled ({dtype}); conv "
+              f"(b,c,m,oh)_blk points: {picked}")
     print("[serve_cnn] OK")
 
 

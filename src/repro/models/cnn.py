@@ -65,19 +65,12 @@ def fuse_plan(cfg: CNNConfig) -> List[Tuple[int, ...]]:
 
     conv immediately followed by pool  -> fused (conv+pool) kernel launch;
     lrn stays standalone (off-pipeline, as in the paper); fc standalone.
+    One shared implementation with the config validator
+    (``core.config.fuse_groups``), so execution and validation can never
+    disagree on the grouping.
     """
-    plan: List[Tuple[int, ...]] = []
-    i = 0
-    ls = cfg.layers
-    while i < len(ls):
-        if (ls[i].kind == "conv" and i + 1 < len(ls)
-                and ls[i + 1].kind == "pool"):
-            plan.append((i, i + 1))
-            i += 2
-        else:
-            plan.append((i,))
-            i += 1
-    return plan
+    from repro.core.config import fuse_groups
+    return fuse_groups(cfg.layers)
 
 
 def _conv_group_kwargs(cfg: CNNConfig, l: ConvLayer, pool, *,
@@ -131,20 +124,29 @@ def _fc_block_kwargs(cfg: CNNConfig, *, m: int = 0, k: int = 0, n: int = 0,
 
 def run_group(params, x: jax.Array, cfg: CNNConfig,
               group: Tuple[int, ...], *,
-              use_pallas: bool = False) -> jax.Array:
+              use_pallas: bool = False, plans=None) -> jax.Array:
     """Execute ONE fusion group of the fp32 pipeline.
 
     This is the stage-sliceable unit the distributed serving engine
     partitions over pipeline stages (``repro.serve.stage_planner``):
     ``cnn_forward`` is exactly a fold of this function over
     ``fuse_plan(cfg)``.
+
+    ``plans`` is an optional frozen plan mapping ``group -> ConvPlan |
+    GemmPlan`` (a ``repro.pipeline.CompiledCNN``'s compile-time DSE
+    results); when present it REPLACES the per-trace registry lookup —
+    the compile-once contract. Without it the legacy behaviour stands:
+    the registry is consulted at trace time (memoised, keyed by shape/
+    dtype/batch).
     """
     l = cfg.layers[group[0]]
     p = params[group[0]]
     if l.kind == "conv":
         pool = cfg.layers[group[1]] if len(group) == 2 else None
         kw = _conv_group_kwargs(cfg, l, pool, use_pallas=use_pallas)
-        if use_pallas and cfg.autotune:
+        if plans is not None and group in plans:
+            kw["plan"] = plans[group]
+        elif use_pallas and cfg.autotune:
             kw["plan"] = _conv_group_plan(cfg, l, kw, x.shape,
                                           p["w"].shape, cfg.dtype)
         # grouped conv (AlexNet two-tower) runs INSIDE the one kernel:
@@ -158,19 +160,25 @@ def run_group(params, x: jax.Array, cfg: CNNConfig,
     if l.kind == "fc":
         B = x.shape[0]
         xf = x.reshape(B, -1)
+        if plans is not None and group in plans:
+            gp = plans[group]
+            blocks = dict(bm=gp.bm, bn=gp.bn, bk=gp.bk)
+        else:
+            blocks = _fc_block_kwargs(cfg, m=B, k=xf.shape[1],
+                                      n=p["w"].shape[1], dtype=cfg.dtype,
+                                      use_pallas=use_pallas)
         return ops.fc(xf, p["w"], p["b"], relu=l.relu,
-                      use_pallas=use_pallas,
-                      **_fc_block_kwargs(cfg, m=B, k=xf.shape[1],
-                                         n=p["w"].shape[1], dtype=cfg.dtype,
-                                         use_pallas=use_pallas))
+                      use_pallas=use_pallas, **blocks)
     raise ValueError(f"unknown layer kind {l.kind!r}")
 
 
 def cnn_forward_stage(params, x: jax.Array, cfg: CNNConfig,
-                      groups, *, use_pallas: bool = False) -> jax.Array:
+                      groups, *, use_pallas: bool = False,
+                      plans=None) -> jax.Array:
     """Run a contiguous slice of fusion groups — one pipeline STAGE."""
     for group in groups:
-        x = run_group(params, x, cfg, group, use_pallas=use_pallas)
+        x = run_group(params, x, cfg, group, use_pallas=use_pallas,
+                      plans=plans)
     return x
 
 
@@ -178,31 +186,93 @@ def cnn_forward(params, x: jax.Array, cfg: CNNConfig, *,
                 use_pallas: bool = False, fused: bool = True) -> jax.Array:
     """x (B, H, W, C) -> logits (B, n_classes).
 
+    DEPRECATION SHIM: the compile-once entry point is
+    ``repro.pipeline.compile_cnn(cfg, spec, params).forward(x)``; this
+    free function delegates to an internally-compiled single-replica
+    default (plan resolution at the incoming batch, so the plan choices
+    — and therefore the jit cache keys — are identical to the historical
+    per-trace registry lookups).
+
     Quantize-then-forward: a ``QuantizedCNNParams`` routes to the int8
-    pipeline (``cnn_forward_quant``); a plain param list runs fp32/bf16.
-    ``cfg.quant="int8"`` declares the model SHOULD be served fixed-point,
-    so handing it raw fp32 params is an error (calibrate first).
+    pipeline; a plain param list runs fp32/bf16. ``cfg.quant="int8"``
+    declares the model SHOULD be served fixed-point, so handing it raw
+    fp32 params is an error (calibrate first).
     """
     from repro.quant.calibrate import QuantizedCNNParams  # local: no cycle
-    if isinstance(params, QuantizedCNNParams):
-        return cnn_forward_quant(params, x, cfg, use_pallas=use_pallas)
-    if cfg.quant == "int8":
+    quantized = isinstance(params, QuantizedCNNParams)
+    if not quantized and cfg.quant == "int8":
         raise ValueError(
             "cfg.quant='int8' but params are not QuantizedCNNParams; "
             "run repro.quant.calibrate_cnn(params, calib_batch, cfg) first")
+    B = x.shape[0]
+    if fused and (cfg.b_blk <= 1 or B % cfg.b_blk == 0):
+        rcfg, plans = _shim_compile(cfg, B, use_pallas, quantized, params)
+        # fold directly over the compiled plans (NOT CompiledCNN.forward):
+        # the per-instance jit there would retrace the whole network on
+        # every shim call, whereas this fold reuses the module-level
+        # jitted ops' caches exactly like the pre-refactor path
+        run = cnn_forward_stage_quant if quantized else cnn_forward_stage
+        return run(params, x, rcfg, fuse_plan(rcfg),
+                   use_pallas=use_pallas, plans=plans)
+    # legacy direct fold: unfused layer-by-layer execution, or a manual
+    # b_blk that doesn't divide this batch (the kernel pads it)
+    if quantized:
+        return cnn_forward_quant(params, x, cfg, use_pallas=use_pallas)
     plan = fuse_plan(cfg) if fused else [(i,) for i in range(len(cfg.layers))]
     return cnn_forward_stage(params, x, cfg, plan, use_pallas=use_pallas)
 
 
+_SHIM_COMPILES: Dict[Tuple[Any, ...], Tuple[CNNConfig, dict]] = {}
+
+
+def _shim_compile(cfg: CNNConfig, B: int, use_pallas: bool,
+                  quantized: bool, params) -> Tuple[CNNConfig, dict]:
+    """The cnn_forward shim's internally-compiled default, memoised.
+
+    The frozen group plans depend only on (cfg shapes, batch, dtype,
+    use_pallas) — never on the parameter values — so one compile per
+    distinct key serves every forward (two dict lookups on the hot
+    path, like the pre-refactor registry); ``params`` ride through to
+    the compile on a miss but are NOT part of the key. The spec is
+    built from ONLY the precision/tiling fields a plain forward
+    consults: a plain forward must not be rejected over
+    serving/placement knobs it never runs (e.g. ``serve_microbatches``
+    on a single-replica cfg).
+    """
+    key = (cfg, B, use_pallas, quantized)
+    hit = _SHIM_COMPILES.get(key)
+    if hit is None:
+        from repro.pipeline import (ExecutionSpec, Precision, Serving,
+                                    Tiling, compile_cnn)
+        spec = ExecutionSpec(
+            # dtype pins float32 when quantized: the int8 pipeline's fp
+            # boundary is fp32 by construction and its plans key "int8"
+            precision=Precision(
+                dtype="float32" if quantized else cfg.dtype,
+                quant="int8" if quantized else "none",
+                calib=max(1, cfg.calib)),
+            tiling=Tiling(autotune=cfg.autotune,
+                          vmem_budget=cfg.vmem_budget,
+                          vec_size=cfg.vec_size, cu_num=cfg.cu_num,
+                          oh_blk=cfg.oh_blk, b_blk=cfg.b_blk),
+            serving=Serving(batch=B),
+            use_pallas=use_pallas)
+        compiled = compile_cnn(cfg, spec, params, with_engine=False)
+        hit = (compiled.cfg, compiled.group_plans)
+        _SHIM_COMPILES[key] = hit
+    return hit
+
+
 def run_group_quant(qp, q: jax.Array, cfg: CNNConfig,
                     group: Tuple[int, ...], *,
-                    use_pallas: bool = False) -> jax.Array:
+                    use_pallas: bool = False, plans=None) -> jax.Array:
     """Execute ONE fusion group of the int8 pipeline on int8 codes.
 
     The fixed-point twin of :func:`run_group` (and the quantized
     stage-sliceable unit): every scale it needs is static inside ``qp``,
     so a stage can start from any group boundary given that boundary's
-    int8 codes.
+    int8 codes. ``plans`` as in :func:`run_group` (frozen compile-time
+    plans override the registry lookup).
     """
     from repro.kernels.ref import pool_ref
     from repro.quant.core import dequantize, quantize
@@ -212,7 +282,9 @@ def run_group_quant(qp, q: jax.Array, cfg: CNNConfig,
     if l.kind == "conv":
         pool = cfg.layers[group[1]] if len(group) == 2 else None
         kw = _conv_group_kwargs(cfg, l, pool, use_pallas=use_pallas)
-        if use_pallas and cfg.autotune:
+        if plans is not None and group in plans:
+            kw["plan"] = plans[group]
+        elif use_pallas and cfg.autotune:
             # dtype rides in the plan-cache key: int8 tiles are 4x
             # smaller, so the tuner picks different (b,c,m,oh)_blk
             # points than the fp32 plans for the same layer
@@ -231,17 +303,22 @@ def run_group_quant(qp, q: jax.Array, cfg: CNNConfig,
     if l.kind == "fc":
         B = q.shape[0]
         qf = q.reshape(B, -1)
+        if plans is not None and group in plans:
+            gp = plans[group]
+            blocks = dict(bm=gp.bm, bn=gp.bn, bk=gp.bk)
+        else:
+            blocks = _fc_block_kwargs(cfg, m=B, k=qf.shape[1],
+                                      n=ql.w_q.shape[1], dtype="int8",
+                                      use_pallas=use_pallas)
         return ops.fc_q(qf, ql.w_q, ql.b, ql.scale,
                         relu=l.relu, use_pallas=use_pallas,
-                        out_scale=ql.y_scale,
-                        **_fc_block_kwargs(cfg, m=B, k=qf.shape[1],
-                                           n=ql.w_q.shape[1], dtype="int8",
-                                           use_pallas=use_pallas))
+                        out_scale=ql.y_scale, **blocks)
     raise ValueError(f"unknown layer kind {l.kind!r}")
 
 
 def cnn_forward_stage_quant(qp, q: jax.Array, cfg: CNNConfig,
-                            groups, *, use_pallas: bool = False) -> jax.Array:
+                            groups, *, use_pallas: bool = False,
+                            plans=None) -> jax.Array:
     """Run a contiguous slice of int8 fusion groups — one pipeline STAGE.
 
     ``q`` is the boundary activation: int8 codes (any interior boundary)
@@ -252,7 +329,8 @@ def cnn_forward_stage_quant(qp, q: jax.Array, cfg: CNNConfig,
     if q.dtype != jnp.int8:
         q = quantize(q, qp.in_scale)
     for group in groups:
-        q = run_group_quant(qp, q, cfg, group, use_pallas=use_pallas)
+        q = run_group_quant(qp, q, cfg, group, use_pallas=use_pallas,
+                            plans=plans)
     return q
 
 

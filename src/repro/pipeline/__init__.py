@@ -1,0 +1,21 @@
+"""repro.pipeline — the compile-once pipeline API.
+
+One entry point, ``compile_cnn(cfg, spec, params) -> CompiledCNN``,
+unifying precision (fp32 / calibrated int8), kernel plans (the conv +
+GEMM DSE), and placement (single / dp / pp / hybrid over the device
+mesh) behind an explicit offline compile phase — the accelerator-
+toolflow pattern of the source paper's host program. See
+``src/repro/pipeline/README.md`` for the spec-field ↔ paper-parameter
+mapping and the compile/run lifecycle.
+"""
+from repro.pipeline.compile import CompiledCNN, compile_cnn
+from repro.pipeline.plan_table import PlanTable, load_plan
+from repro.pipeline.spec import (ExecutionSpec, Placement, Precision,
+                                 Serving, Tiling, resolve_config,
+                                 spec_from_config)
+
+__all__ = [
+    "CompiledCNN", "ExecutionSpec", "Placement", "PlanTable", "Precision",
+    "Serving", "Tiling", "compile_cnn", "load_plan", "resolve_config",
+    "spec_from_config",
+]

@@ -1,0 +1,330 @@
+"""compile_cnn: the offline compile phase of the PipeCNN toolflow.
+
+The FPGA toolflow pattern (FFCNN 2022; the survey literature's
+accelerator-compiler split): an explicit *compile* phase that resolves
+every decision — kernel tilings, fixed-point scales, stage partition,
+mesh placement — into a fixed execution plan, and a thin *run* phase
+that only enqueues work. ``compile_cnn(cfg, spec, params)`` is that
+compile step:
+
+  * runs the conv + GEMM DSE for every fusion group at the declared
+    serving batch and dtype (and at the DP super-batch / every GPipe
+    microbatch candidate, so no plan lookup is left for runtime);
+  * runs int8 calibration when ``spec.precision.quant == "int8"`` and
+    the params are not already quantized;
+  * runs the stage planner and constructs the ``(data, pipe)`` device
+    mesh for dp/pp/hybrid placements (via :class:`repro.serve.ServeEngine`);
+  * freezes everything into an immutable :class:`CompiledCNN` whose
+    plan table serialises to JSON (``save_plan``/``load_plan``) — a
+    committed artifact seeds the autotune registries and a re-compile
+    performs ZERO sweeps (``autotune.sweep_stats`` proves it).
+
+``CompiledCNN`` then exposes the whole runtime surface: ``.forward``,
+``.forward_stage``, ``.serve``, ``.plans``. The legacy free functions
+(``models.cnn.cnn_forward``, ``launch.serve_cnn.serve``) survive as
+shims delegating here.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import CNNConfig
+from repro.kernels import autotune, ops
+from repro.pipeline.plan_table import PlanTable, load_plan
+from repro.pipeline.spec import ExecutionSpec, resolve_config, \
+    spec_from_config
+
+
+def _resolve_group_plans(cfg: CNNConfig, batch: int,
+                         dtype: str) -> Dict[Tuple[int, ...], Any]:
+    """One DSE lookup per fusion group at (batch, dtype) — the frozen
+    plan mapping ``CompiledCNN.forward`` executes with. Registry-memoised:
+    a second compile over the same spec is pure cache hits."""
+    from repro.serve.stage_planner import group_io_shapes
+
+    plans: Dict[Tuple[int, ...], Any] = {}
+    for group, in_shape, out_shape in group_io_shapes(cfg):
+        l = cfg.layers[group[0]]
+        if l.kind == "conv":
+            h, w, c = in_shape
+            pool = cfg.layers[group[1]] if len(group) == 2 else None
+            shape = autotune.ConvShape(
+                h=h, w=w, c=c, kh=l.kernel, kw=l.kernel, m=l.out_ch,
+                stride=l.stride, pad=l.pad, groups=l.groups,
+                pool=(pool.pool if pool else None),
+                pool_k=(pool.kernel if pool else 2),
+                pool_s=(pool.stride if pool else 2), dtype=dtype, b=batch)
+            plans[group] = autotune.get_plan(
+                shape, vmem_budget=cfg.vmem_budget)
+        elif l.kind == "fc":
+            k = 1
+            for d in in_shape:
+                k *= d
+            plans[group] = autotune.get_gemm_plan(
+                autotune.GemmShape(m=batch, k=k, n=out_shape[-1],
+                                   dtype=dtype),
+                vmem_budget=cfg.vmem_budget)
+    return plans
+
+
+class CompiledCNN:
+    """A fully-resolved, immutable-plan CNN pipeline.
+
+    Construct via :func:`compile_cnn` — everything shape-, precision- or
+    placement-dependent was decided at compile time; the methods here
+    only run. Runtime surface:
+
+      * :meth:`forward` — logits for a batch (single, dp-sharded or
+        pipeline-parallel, per the compiled placement);
+      * :meth:`forward_stage` — one pipeline stage on a boundary
+        activation (the unit the fleet engine streams);
+      * :meth:`serve` — the request loop; returns a
+        :class:`~repro.serve.report.FleetReport` (completions ride on
+        ``report.completions``);
+      * :meth:`plans` / :meth:`save_plan` / :meth:`load_plan` — the
+        frozen DSE results as data.
+    """
+
+    def __init__(self, *, cfg: CNNConfig, spec: ExecutionSpec, params,
+                 quant: bool, group_plans: Dict[Tuple[int, ...], Any],
+                 plan_table: PlanTable, engine=None):
+        self.cfg = cfg                     # the RESOLVED CNNConfig
+        self.spec = spec
+        self.params = params
+        self.quant = quant
+        self.group_plans = dict(group_plans)
+        self.plan_table = plan_table
+        self.engine = engine
+        from repro.models.cnn import fuse_plan
+        self._fuse = fuse_plan(cfg)
+        self._fwd = None                   # lazily-jitted single forward
+
+    # -- plumbing ----------------------------------------------------------
+
+    def _ctx(self):
+        """Thread the spec's interpret choice through every run."""
+        if self.spec.interpret is None:
+            return contextlib.nullcontext()
+        return ops.interpret_mode(self.spec.interpret)
+
+    @property
+    def mode(self) -> str:
+        return self.spec.mode
+
+    @property
+    def mesh(self):
+        return self.engine.mesh if self.engine is not None else None
+
+    @property
+    def stage_plan(self):
+        return self.engine.stage_plan if self.engine is not None else None
+
+    @property
+    def stages(self) -> Tuple[Tuple[Tuple[int, ...], ...], ...]:
+        """Per-stage fusion groups: the compiled stage partition, or one
+        stage per fusion group when no pipeline placement was compiled."""
+        sp = self.stage_plan
+        if sp is not None:
+            return tuple(s.groups for s in sp.stages)
+        return tuple((g,) for g in self._fuse)
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    def _single_forward(self):
+        """The jitted whole-network fold over the frozen plan table."""
+        if self._fwd is None:
+            from repro.models.cnn import (cnn_forward_stage,
+                                          cnn_forward_stage_quant)
+            cfg, groups, plans = self.cfg, self._fuse, self.group_plans
+            up, quant = self.spec.use_pallas, self.quant
+
+            def f(p, x):
+                run = cnn_forward_stage_quant if quant else cnn_forward_stage
+                return run(p, x, cfg, groups, use_pallas=up, plans=plans)
+
+            self._fwd = jax.jit(f)
+        return self._fwd
+
+    # -- the run phase -----------------------------------------------------
+
+    def forward(self, x: jax.Array) -> jax.Array:
+        """x (B, H, W, C) fp32 -> logits (B, n_classes).
+
+        Runs the compiled placement: plain fold (single), input sharded
+        over the mesh "data" axis (dp), or microbatches streamed through
+        device-resident stages (pp/hybrid; B must divide into the
+        compiled microbatch grid). Numerics are placement-independent:
+        fp32 allclose / int8 bit-exact vs the unsharded fold.
+        """
+        with self._ctx():
+            if self.spec.placement.pp_stages > 1:
+                from repro.serve.engine import pipeline_logits
+                return pipeline_logits(
+                    self.params, x, self.cfg, self.mesh, self.stage_plan,
+                    n_microbatches=self.engine.n_micro,
+                    use_pallas=self.spec.use_pallas, quant=self.quant,
+                    dp_axis="data")
+            fwd = self._single_forward()
+            if self.spec.placement.replicas > 1 and self.mesh is not None:
+                from repro.parallel.sharding import batch_sharding
+                x = jax.device_put(x, batch_sharding(self.mesh, x.shape))
+            return fwd(self.params, x)
+
+    def forward_stage(self, i: int, h: jax.Array) -> jax.Array:
+        """Run compiled stage ``i`` on its boundary activation ``h``.
+
+        ``h`` is the previous stage's output — int8 codes at interior
+        boundaries of a quantized pipeline (the raw fp32 batch for stage
+        0, which quantizes at the network edge), fp32 otherwise.
+        """
+        from repro.models.cnn import (cnn_forward_stage,
+                                      cnn_forward_stage_quant)
+        groups = self.stages[i]
+        with self._ctx():
+            run = cnn_forward_stage_quant if self.quant else \
+                cnn_forward_stage
+            return run(self.params, h, self.cfg, groups,
+                       use_pallas=self.spec.use_pallas,
+                       plans=self.group_plans)
+
+    def serve(self, requests: List):
+        """Drain a request stream through the compiled fleet.
+
+        Returns the :class:`~repro.serve.report.FleetReport`; the
+        per-request :class:`~repro.serve.router.Completion` list rides on
+        ``report.completions``.
+        """
+        if self.engine is None:
+            from repro.serve.engine import ServeEngine
+            self.engine = ServeEngine.from_spec(self.cfg, self.params,
+                                                self.spec)
+        with self._ctx():
+            done, rep = self.engine.serve(requests)
+        rep.completions = done
+        return rep
+
+    # -- the frozen plans as data ------------------------------------------
+
+    def plans(self) -> PlanTable:
+        """Every DSE decision this compile resolved, as serialisable data."""
+        return self.plan_table
+
+    def save_plan(self, path: str) -> str:
+        """Write the plan table as canonical JSON (byte-stable across
+        save/load round trips) — commit it next to ``BENCH_conv.json``
+        and a future ``compile_cnn(..., plan_path=...)`` skips the DSE
+        sweep entirely."""
+        return self.plan_table.save(path)
+
+    load_plan = staticmethod(load_plan)
+
+    def __repr__(self) -> str:
+        return (f"CompiledCNN({self.cfg.name}, mode={self.mode}, "
+                f"dtype={self.spec.run_dtype}, "
+                f"batch={self.spec.serving.batch}, "
+                f"stages={self.n_stages}, "
+                f"plans={self.plan_table.summary()})")
+
+
+def compile_cnn(cfg: CNNConfig, spec: Optional[ExecutionSpec] = None,
+                params_or_calib=None, *,
+                plans: Optional[PlanTable] = None,
+                plan_path: Optional[str] = None,
+                key=None, with_engine: bool = True) -> CompiledCNN:
+    """Compile a CNN into a :class:`CompiledCNN` (the toolflow's offline
+    phase: precision + plans + placement resolved once, run many).
+
+    ``params_or_calib`` accepts the whole precision lifecycle:
+
+      * ``None`` — fresh ``init_cnn_params`` (deterministic from ``key``);
+      * a param list — use as-is (calibrated here when quantizing);
+      * a ``QuantizedCNNParams`` — pre-calibrated fixed-point params;
+      * an fp32 array — a calibration batch: params are initialised and
+        calibrated on it (requires ``spec.precision.quant='int8'``);
+      * ``(params, calib_batch)`` — explicit pair for quantization.
+
+    ``plans`` / ``plan_path`` pre-seed the autotune registries from a
+    saved plan table so compilation performs no DSE sweep; the returned
+    object's own table is re-captured (and is identical for the same
+    spec — the registry is authoritative either way).
+
+    ``with_engine=False`` skips serving-engine/mesh construction (used
+    by the ``cnn_forward`` shim, which only needs ``.forward``); the
+    engine is then built lazily on first ``.serve``.
+    """
+    from repro.models.cnn import init_cnn_params
+    from repro.quant.calibrate import QuantizedCNNParams, calibrate_cnn
+
+    spec = spec if spec is not None else spec_from_config(cfg)
+    rcfg = resolve_config(cfg, spec)
+    quantize = spec.precision.quant == "int8"
+
+    # -- unpack the params/calibration source ------------------------------
+    params, calib = params_or_calib, None
+    if isinstance(params_or_calib, tuple):
+        params, calib = params_or_calib
+    elif params_or_calib is not None and hasattr(params_or_calib, "shape"):
+        params, calib = None, params_or_calib   # a bare calibration batch
+    if calib is not None and not quantize:
+        raise ValueError(
+            "a calibration batch was provided but "
+            "spec.precision.quant='none' — set quant='int8' or drop the "
+            "batch")
+    if isinstance(params, QuantizedCNNParams) and not quantize:
+        raise ValueError(
+            "params are QuantizedCNNParams but spec.precision.quant="
+            "'none' — compile with Precision(quant='int8')")
+    if params is None:
+        params = init_cnn_params(key if key is not None
+                                 else jax.random.key(0), rcfg)
+
+    # -- pre-seed from a committed plan table ------------------------------
+    if plan_path is not None:
+        plans = PlanTable.load(plan_path)
+    if plans is not None:
+        plans.seed()
+
+    # -- compile: calibration, DSE, stage planning, mesh -------------------
+    with autotune.record_lookups() as rec:
+        if quantize and not isinstance(params, QuantizedCNNParams):
+            if calib is None:
+                # the serving default: a deterministic synthetic batch
+                # from the request distribution (rng(123), as the CLI
+                # always did)
+                rng = np.random.default_rng(123)
+                calib = jnp.asarray(rng.standard_normal(
+                    (rcfg.calib, rcfg.input_hw, rcfg.input_hw,
+                     rcfg.input_ch)).astype(np.float32))
+            params = calibrate_cnn(params, calib, rcfg)
+        quant = isinstance(params, QuantizedCNNParams)
+
+        group_plans: Dict[Tuple[int, ...], Any] = {}
+        if spec.use_pallas and spec.tiling.autotune:
+            group_plans = _resolve_group_plans(
+                rcfg, spec.serving.batch, spec.run_dtype)
+            R, S = spec.placement.replicas, spec.placement.pp_stages
+            if R > 1 and S == 1:
+                # the dp gang round runs the fold on the packed
+                # (R * batch) super-batch — resolve those plans now too,
+                # not at first-serve trace time
+                _resolve_group_plans(rcfg, R * spec.serving.batch,
+                                     spec.run_dtype)
+
+        engine = None
+        if with_engine:
+            from repro.serve.engine import ServeEngine
+            # stage planning (incl. the GPipe microbatch sweep) and mesh
+            # construction happen HERE, inside the compile
+            engine = ServeEngine.from_spec(rcfg, params, spec)
+
+    table = PlanTable.from_rows(rec["conv"], rec["gemm"])
+    return CompiledCNN(cfg=rcfg, spec=spec, params=params, quant=quant,
+                       group_plans=group_plans, plan_table=table,
+                       engine=engine)

@@ -1,0 +1,94 @@
+"""The frozen plan table: a compiled pipeline's DSE results as data.
+
+PipeCNN's offline sweep produces a fixed (VEC_SIZE, CU_NUM) point that is
+then baked into the bitstream; the TPU analogue is this table — every
+conv :class:`~repro.kernels.autotune.ConvPlan` and GEMM
+:class:`~repro.kernels.autotune.GemmPlan` a compiled pipeline looks up,
+captured at compile time (``autotune.record_lookups``) and serialised to
+JSON in exactly the registry-snapshot record format ``BENCH_conv.json``
+already uses. A committed table round-trips byte-identically
+(``from_json(tbl.to_json()).to_json() == tbl.to_json()``) and, loaded
+into a fresh process, seeds the autotune registries so a re-compile is
+pure cache hits — zero DSE sweeps (asserted by tests via
+``autotune.sweep_stats``).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+from repro.kernels import autotune
+
+_FORMAT = 1
+
+
+def _canon(rows: List[dict]) -> Tuple[dict, ...]:
+    """Deduplicate + deterministically order snapshot records."""
+    seen = {}
+    for row in rows:
+        seen[json.dumps(row, sort_keys=True)] = row
+    return tuple(seen[k] for k in sorted(seen))
+
+
+@dataclass(frozen=True, eq=True)
+class PlanTable:
+    """Immutable, JSON-round-trippable set of tuned plans."""
+    conv: Tuple[dict, ...] = ()
+    gemm: Tuple[dict, ...] = ()
+
+    @classmethod
+    def from_rows(cls, conv: List[dict], gemm: List[dict]) -> "PlanTable":
+        return cls(conv=_canon(conv), gemm=_canon(gemm))
+
+    def __len__(self) -> int:
+        return len(self.conv) + len(self.gemm)
+
+    # -- (de)serialisation -------------------------------------------------
+
+    def to_json(self) -> str:
+        """Canonical JSON: sorted keys, deterministic row order — the
+        save→load→save byte-equality contract."""
+        return json.dumps({"format": _FORMAT,
+                           "conv": list(self.conv),
+                           "gemm": list(self.gemm)},
+                          sort_keys=True, indent=1) + "\n"
+
+    @classmethod
+    def from_json(cls, text: str) -> "PlanTable":
+        doc = json.loads(text)
+        if doc.get("format") != _FORMAT:
+            raise ValueError(
+                f"plan table format {doc.get('format')!r} != {_FORMAT}; "
+                f"re-save with CompiledCNN.save_plan")
+        return cls.from_rows(doc["conv"], doc["gemm"])
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "PlanTable":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # -- registry seeding --------------------------------------------------
+
+    def seed(self) -> int:
+        """Insert these plans into the process autotune registries.
+
+        Keys already tuned in this process win (the registry stays
+        authoritative); returns the number of records inserted. After
+        seeding, a ``compile_cnn`` over the same spec performs no DSE
+        sweep — the skip-the-sweep contract of a committed artifact.
+        """
+        return autotune.seed_registry(self.conv, self.gemm)
+
+    def summary(self) -> Dict[str, int]:
+        return {"conv_plans": len(self.conv), "gemm_plans": len(self.gemm)}
+
+
+def load_plan(path: str) -> PlanTable:
+    """Load a saved plan table (``CompiledCNN.save_plan`` output)."""
+    return PlanTable.load(path)

@@ -154,6 +154,10 @@ class ServeEngine:
         R, S = replicas, pp_stages
         if R < 1 or S < 1:
             raise ValueError("replicas and pp_stages must be >= 1")
+        if not execute and clock == "measured":
+            raise ValueError(
+                "execute=False (device-free simulation) has no wall time "
+                "to measure; use clock='modeled'")
         self.mode = ("single" if R * S == 1 else
                      "dp" if S == 1 else
                      "pp" if R == 1 else "hybrid")
@@ -200,6 +204,20 @@ class ServeEngine:
                 from repro.launch.mesh import compat_make_mesh
                 self.mesh = compat_make_mesh((R, S), ("data", "pipe"))
             self._round_fn = self._build_round_fn()
+
+    @classmethod
+    def from_spec(cls, cfg: CNNConfig, params, spec) -> "ServeEngine":
+        """Build the engine from a ``repro.pipeline.ExecutionSpec`` —
+        the placement/serving sub-specs are the engine's whole
+        constructor surface (``compile_cnn`` calls this so the mesh and
+        stage plan are resolved at compile time)."""
+        return cls(cfg, params, batch=spec.serving.batch,
+                   replicas=spec.placement.replicas,
+                   pp_stages=spec.placement.pp_stages,
+                   n_microbatches=spec.placement.microbatches,
+                   use_pallas=spec.use_pallas, clock=spec.serving.clock,
+                   max_queue=spec.serving.max_queue,
+                   execute=spec.serving.execute)
 
     # -- forward builders --------------------------------------------------
 

@@ -73,9 +73,22 @@ class FleetReport:
     makespan_s: float = 0.0
     utilization: List[float] = field(default_factory=list)  # per replica
     bubble_fraction: float = 0.0       # GPipe fill/drain share (pp modes)
+    # per-request Completion list — populated by CompiledCNN.serve (the
+    # compile-once API returns ONE report object); excluded from
+    # to_dict so serialised reports stay summary-sized
+    completions: List = field(default_factory=list, repr=False)
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        # NOT dataclasses.asdict: that would deep-convert every
+        # Completion in ``completions`` (one per served request) only to
+        # drop them; every kept field is a flat scalar or float list
+        out = {}
+        for f in dataclasses.fields(self):
+            if f.name == "completions":
+                continue
+            v = getattr(self, f.name)
+            out[f.name] = list(v) if isinstance(v, list) else v
+        return out
 
     def summary(self) -> str:
         util = (", util " + "/".join(f"{u:.0%}" for u in self.utilization)

@@ -1,0 +1,86 @@
+"""Public-API surface snapshot (CI contract).
+
+The compile-once refactor turned ``repro.pipeline`` and
+``repro.kernels.ops`` into the two entry-point modules everything else
+(examples, CLI, benchmarks, downstream users) imports from. These tests
+pin their exported names so a future refactor cannot silently drop or
+rename an entry point — changing the surface requires editing the
+snapshot here, which is exactly the review trigger we want.
+"""
+import inspect
+
+import repro.kernels.ops as ops
+import repro.pipeline as pipeline
+
+PIPELINE_SURFACE = {
+    "CompiledCNN",
+    "ExecutionSpec",
+    "Placement",
+    "PlanTable",
+    "Precision",
+    "Serving",
+    "Tiling",
+    "compile_cnn",
+    "load_plan",
+    "resolve_config",
+    "spec_from_config",
+}
+
+OPS_SURFACE = {
+    "attention",
+    "fc",
+    "fc_q",
+    "fused_conv",
+    "fused_conv_q",
+    "get_interpret",
+    "interpret_mode",
+    "lrn",
+    "set_interpret",
+}
+
+
+def test_pipeline_exports_exactly_the_contract():
+    assert set(pipeline.__all__) == PIPELINE_SURFACE
+    for name in PIPELINE_SURFACE:
+        assert hasattr(pipeline, name), f"repro.pipeline.{name} missing"
+
+
+def test_ops_exports_exactly_the_contract():
+    assert set(ops.__all__) == OPS_SURFACE
+    for name in OPS_SURFACE:
+        assert hasattr(ops, name), f"repro.kernels.ops.{name} missing"
+
+
+def test_compiled_cnn_runtime_surface():
+    """The CompiledCNN method contract of the compile-once API."""
+    for method in ("forward", "forward_stage", "serve", "plans",
+                   "save_plan", "load_plan"):
+        assert callable(getattr(pipeline.CompiledCNN, method, None)), \
+            f"CompiledCNN.{method} missing"
+
+
+def test_compile_cnn_signature_stable():
+    """The compile entry point's keyword surface (shims + CLI rely on
+    these exact names)."""
+    sig = inspect.signature(pipeline.compile_cnn)
+    assert list(sig.parameters) == [
+        "cfg", "spec", "params_or_calib", "plans", "plan_path", "key",
+        "with_engine"]
+
+
+def test_execution_spec_subspec_fields():
+    """The four sub-specs carve up the knob space exactly once."""
+    import dataclasses
+    assert sorted(f.name for f in dataclasses.fields(pipeline.Precision)) \
+        == ["calib", "dtype", "quant"]
+    assert sorted(f.name for f in dataclasses.fields(pipeline.Tiling)) \
+        == ["autotune", "b_blk", "cu_num", "oh_blk", "vec_size",
+            "vmem_budget"]
+    assert sorted(f.name for f in dataclasses.fields(pipeline.Placement)) \
+        == ["microbatches", "pp_stages", "replicas"]
+    assert sorted(f.name for f in dataclasses.fields(pipeline.Serving)) \
+        == ["batch", "clock", "execute", "max_queue"]
+    assert sorted(f.name for f in
+                  dataclasses.fields(pipeline.ExecutionSpec)) \
+        == ["interpret", "placement", "precision", "serving", "tiling",
+            "use_pallas"]
