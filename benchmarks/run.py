@@ -198,7 +198,12 @@ def fleet_bench(fast: bool) -> dict:
       devices needed);
     * ``fleet_vs_single(alexnet)`` — the PR acceptance row: 4
       data-parallel replicas must achieve >= 3x aggregate modeled
-      throughput vs the single-replica baseline (enforced by main()).
+      throughput vs the single-replica baseline (enforced by main());
+    * ``{arch}_fleet_dp4_fail1_model`` — the resilience row (PR 6): the
+      same dp4 fleet with one deterministic replica failure mid-burst
+      and a later recovery (modeled artifact-restore latency charged),
+      retries re-dispatching the losses. Deterministic chaos, so the
+      throughput-under-failure cost is a gateable number.
     """
     import dataclasses as _dc
 
@@ -206,20 +211,21 @@ def fleet_bench(fast: bool) -> dict:
 
     from repro.configs import get_config
     from repro.kernels import autotune
-    from repro.serve import Request, ServeEngine
+    from repro.serve import FaultSchedule, Request, ServeEngine, total_cost
 
     rows: dict = {}
     BATCH, N_REQ = 8, 96
 
-    def sim(cfg, replicas, pp_stages):
+    def sim(cfg, replicas, pp_stages, faults=None, retries=0):
         # execute=False: pure discrete-event simulation over the roofline
         # cost model — image payloads are never computed, so keep them tiny
         reqs = [Request(rid=i, image=np.zeros((1, 1, 1), np.float32),
                         t_arrival=0.0) for i in range(N_REQ)]
         eng = ServeEngine(cfg, [], batch=BATCH, replicas=replicas,
                           pp_stages=pp_stages, clock="modeled",
-                          execute=False)
-        _, rep = eng.serve(reqs)
+                          execute=False, retries=retries)
+        done, rep = eng.serve(reqs, faults=faults)
+        assert sorted(c.rid for c in done) == list(range(N_REQ))
         return eng, rep
 
     for name in ("alexnet",) if fast else ("alexnet", "vgg16"):
@@ -245,6 +251,23 @@ def fleet_bench(fast: bool) -> dict:
                           "batch": BATCH, "n_micro": eng.n_micro,
                           "throughput_img_s": rep.throughput,
                           "p95_ms": rep.p95_ms}}
+        # resilience row: kill replica 0 half a round in, recover it two
+        # rounds later (restore latency on top), re-dispatch with budget 2
+        t_round = total_cost(cfg, BATCH)
+        chaos = FaultSchedule.at(t_round * 0.5, t_round * 2.5, replica=0)
+        _, crep = sim(cfg, 4, 1, faults=chaos, retries=2)
+        rows[f"{name}_fleet_dp4_fail1_model"] = {
+            "us_per_call": 1e6 / crep.throughput,
+            "fleet": {"mode": crep.mode, "replicas": 4, "pp_stages": 1,
+                      "batch": BATCH, "throughput_img_s": crep.throughput,
+                      "p95_ms": crep.p95_ms,
+                      "n_failures": crep.n_failures,
+                      "n_recoveries": crep.n_recoveries,
+                      "n_retries": crep.n_retries,
+                      "degraded_rounds": crep.degraded_rounds,
+                      "ttr_ms": max(crep.time_to_recover_s) * 1e3
+                      if crep.time_to_recover_s else 0.0}}
+
         rows[f"fleet_vs_single({name})"] = {
             "single_img_s": fleet["single"].throughput,
             "dp4_img_s": fleet["dp4"].throughput,

@@ -1,2 +1,4 @@
-from repro.ckpt.checkpoint import (CheckpointManager, load_checkpoint,
+from repro.ckpt.checkpoint import (CheckpointError, CheckpointManager,
+                                   clean_stale_tmp, commit_dir,
+                                   latest_step, load_checkpoint,
                                    save_checkpoint)

@@ -11,19 +11,63 @@ Layout:  <dir>/step_<N>/
 * Elastic: restore is sharding-agnostic — arrays are loaded whole and
   re-placed under the *current* mesh/sharding, so a run checkpointed on a
   16-host data axis restores onto 8 or 32 (tested in tests/test_ckpt.py).
-* Fault-tolerant: `latest_step` scans for the newest committed step.
+* Fault-tolerant: `latest_step` scans for the newest committed step and
+  garbage-collects stale `.tmp` wreckage a crashed writer left behind.
+
+`commit_dir` is the reusable atomic-commit primitive (write into
+`<target>.tmp`, stamp `_COMMITTED`, rename) — the serving artifact
+(`repro.pipeline.artifact`) snapshots `CompiledCNN`s under the same
+protocol.
 """
 from __future__ import annotations
 
+import atexit
 import json
-import os
 import shutil
 import threading
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointError(ValueError):
+    """A checkpoint on disk does not match what restore expects —
+    truncated/corrupt leaves, wrong leaf count, wrong shapes. Named so
+    callers can distinguish 'bad artifact' from programming errors."""
+
+
+def commit_dir(target: Path, write: Callable[[Path], None]) -> Path:
+    """Atomically materialize ``target``: ``write(tmp)`` fills a
+    ``<target>.tmp`` staging dir, then ``_COMMITTED`` is stamped and the
+    dir renamed into place. A crash at any point leaves either the old
+    committed target or ignorable ``.tmp`` wreckage — never a
+    half-written artifact that readers would trust."""
+    target = Path(target)
+    tmp = Path(str(target) + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    write(tmp)
+    (tmp / "_COMMITTED").write_text("ok")
+    if target.exists():
+        shutil.rmtree(target)
+    tmp.rename(target)
+    return target
+
+
+def clean_stale_tmp(ckpt_dir: str) -> int:
+    """Remove `*.tmp` staging dirs (a crashed writer's wreckage; never
+    referenced by restore). Returns how many were removed."""
+    root = Path(ckpt_dir)
+    if not root.exists():
+        return 0
+    stale = [d for d in root.iterdir()
+             if d.is_dir() and d.name.endswith(".tmp")]
+    for d in stale:
+        shutil.rmtree(d, ignore_errors=True)
+    return len(stale)
 
 
 def _flatten_with_names(tree):
@@ -33,32 +77,27 @@ def _flatten_with_names(tree):
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> Path:
     """Write one committed checkpoint synchronously."""
-    root = Path(ckpt_dir) / f"step_{step:08d}"
-    tmp = Path(str(root) + ".tmp")
-    if tmp.exists():
-        shutil.rmtree(tmp)
-    tmp.mkdir(parents=True)
     leaves, treedef = _flatten_with_names(tree)
-    manifest = {"step": step, "treedef": str(treedef),
-                "n_leaves": len(leaves),
-                "leaves": []}
-    for i, leaf in enumerate(leaves):
-        arr = np.asarray(jax.device_get(leaf))
-        np.save(tmp / f"leaf_{i}.npy", arr)
-        manifest["leaves"].append(
-            {"shape": list(arr.shape), "dtype": str(arr.dtype)})
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
-    (tmp / "_COMMITTED").write_text("ok")
-    if root.exists():
-        shutil.rmtree(root)
-    tmp.rename(root)
-    return root
+
+    def write(tmp: Path) -> None:
+        manifest = {"step": step, "treedef": str(treedef),
+                    "n_leaves": len(leaves),
+                    "leaves": []}
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            np.save(tmp / f"leaf_{i}.npy", arr)
+            manifest["leaves"].append(
+                {"shape": list(arr.shape), "dtype": str(arr.dtype)})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+
+    return commit_dir(Path(ckpt_dir) / f"step_{step:08d}", write)
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
     root = Path(ckpt_dir)
     if not root.exists():
         return None
+    clean_stale_tmp(ckpt_dir)
     steps = []
     for d in root.iterdir():
         if d.name.startswith("step_") and (d / "_COMMITTED").exists():
@@ -81,12 +120,26 @@ def load_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None,
     root = Path(ckpt_dir) / f"step_{step:08d}"
     manifest = json.loads((root / "manifest.json").read_text())
     leaves, treedef = _flatten_with_names(like)
-    assert manifest["n_leaves"] == len(leaves), \
-        f"checkpoint has {manifest['n_leaves']} leaves, model {len(leaves)}"
-    loaded = [np.load(root / f"leaf_{i}.npy") for i in range(len(leaves))]
-    for got, ref in zip(loaded, leaves):
-        assert tuple(got.shape) == tuple(np.shape(ref)), \
-            f"shape mismatch {got.shape} vs {np.shape(ref)}"
+    if manifest["n_leaves"] != len(leaves):
+        raise CheckpointError(
+            f"checkpoint {root} (step {step}) has "
+            f"{manifest['n_leaves']} leaves but the model expects "
+            f"{len(leaves)} — restoring into a different architecture?")
+    loaded = []
+    for i, ref in enumerate(leaves):
+        try:
+            got = np.load(root / f"leaf_{i}.npy")
+        except Exception as e:          # truncated/corrupt/missing array
+            raise CheckpointError(
+                f"checkpoint {root} (step {step}): leaf {i} "
+                f"(leaf_{i}.npy) is unreadable — truncated or corrupt "
+                f"write? ({type(e).__name__}: {e})") from e
+        if tuple(got.shape) != tuple(np.shape(ref)):
+            raise CheckpointError(
+                f"checkpoint {root} (step {step}): leaf {i} has shape "
+                f"{tuple(got.shape)} but the model expects "
+                f"{tuple(np.shape(ref))}")
+        loaded.append(got)
     out = jax.tree_util.tree_unflatten(treedef, loaded)
     if shardings is not None:
         out = jax.tree.map(
@@ -100,13 +153,30 @@ def load_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None,
 
 
 class CheckpointManager:
-    """Async checkpointing with bounded retention."""
+    """Async checkpointing with bounded retention.
+
+    Construction garbage-collects stale ``.tmp`` staging dirs (crashed
+    writers) and registers an ``atexit`` flush: if the process exits
+    with the last ``save_async`` still in flight — or failed — the
+    error surfaces instead of being silently dropped with the daemon
+    thread.
+    """
 
     def __init__(self, ckpt_dir: str, keep: int = 3):
         self.dir = ckpt_dir
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        clean_stale_tmp(ckpt_dir)
+        atexit.register(self._flush_at_exit)
+
+    def _flush_at_exit(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:     # atexit prints the traceback
+            err, self._error = self._error, None
+            raise err
 
     def save_async(self, step: int, tree: Any) -> None:
         self.wait()

@@ -39,8 +39,9 @@ from repro.core.config import CNNConfig, flops_per_image
 from repro.kernels import autotune
 from repro.pipeline import (ExecutionSpec, Placement, Precision, Serving,
                             Tiling, compile_cnn)
-from repro.serve import (Completion, MicroBatcher, Request,  # noqa: F401
-                         ServeEngine, latency_report)
+from repro.serve import (Completion, FaultSchedule,  # noqa: F401
+                         MicroBatcher, Request, ServeEngine,
+                         latency_report)
 
 
 def synthetic_requests(n: int, hw: int, ch: int, rate: float,
@@ -135,6 +136,32 @@ def main() -> None:
                          "batch, then run the int8 kernel pipeline")
     ap.add_argument("--calib", type=int, default=8,
                     help="calibration images for --quant int8")
+    # -- chaos / resilience flags -----------------------------------------
+    ap.add_argument("--fail-at", type=float, default=None,
+                    help="inject a replica failure at this simulated "
+                         "second (deterministic chaos)")
+    ap.add_argument("--recover-at", type=float, default=None,
+                    help="recover the failed replica at this simulated "
+                         "second (requires --fail-at; restore latency is "
+                         "charged on top)")
+    ap.add_argument("--fail-replica", type=int, default=0,
+                    help="which replica --fail-at kills")
+    ap.add_argument("--mtbf", type=float, default=0.0,
+                    help="stochastic chaos: mean time between failures "
+                         "per replica (seconds; needs --mttr)")
+    ap.add_argument("--mttr", type=float, default=0.0,
+                    help="mean time to repair for --mtbf mode (seconds)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for --mtbf chaos (byte-reproducible)")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="per-request re-dispatch budget after a replica "
+                         "failure (exceeded -> Completion status='failed')")
+    ap.add_argument("--backoff", type=float, default=0.0,
+                    help="base exponential-backoff delay (s) before a "
+                         "retried request re-enters admission")
+    ap.add_argument("--slo", type=float, default=0.0,
+                    help="per-request latency bound (s); the report "
+                         "counts violations (0 = off)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -162,8 +189,21 @@ def main() -> None:
         placement=Placement(replicas=replicas, pp_stages=pp_stages,
                             microbatches=args.microbatches),
         serving=Serving(batch=args.batch, clock=args.clock,
-                        max_queue=args.max_queue),
+                        max_queue=args.max_queue, retries=args.retries,
+                        backoff=args.backoff, slo=args.slo),
         use_pallas=use_pallas)
+    faults = None
+    if args.mtbf and args.fail_at is not None:
+        raise SystemExit("--fail-at (deterministic) and --mtbf "
+                         "(stochastic) are exclusive chaos modes")
+    if args.fail_at is not None:
+        faults = FaultSchedule.at(args.fail_at, args.recover_at,
+                                  replica=args.fail_replica)
+    elif args.recover_at is not None:
+        raise SystemExit("--recover-at requires --fail-at")
+    elif args.mtbf:
+        faults = FaultSchedule.mtbf(args.mtbf, args.mttr, replicas,
+                                    seed=args.seed)
     compiled = compile_cnn(cfg, spec)
     requests = synthetic_requests(n_req, cfg.input_hw, cfg.input_ch,
                                   args.rate)
@@ -185,7 +225,12 @@ def main() -> None:
               + " | ".join(f"s{i}:{len(s.groups)}g "
                            f"{s.t_model * 1e6:.0f}us"
                            for i, s in enumerate(sp.stages)))
-    rep = compiled.serve(requests)
+    if faults is not None:
+        print(f"[serve_cnn] chaos: {faults!r}, retries={args.retries}, "
+              f"backoff={args.backoff}s")
+    rep = compiled.serve(requests, faults=faults)
+    # the resilience invariant: every request ends as exactly one
+    # completion (ok or explicitly failed) or one admission rejection
     assert len(rep.completions) + rep.n_rejected == n_req, \
         (len(rep.completions), n_req)
     gops = flops_per_image(compiled.cfg) * rep.throughput / 1e9

@@ -8,6 +8,7 @@ toolflow pattern of the source paper's host program. See
 ``src/repro/pipeline/README.md`` for the spec-field ↔ paper-parameter
 mapping and the compile/run lifecycle.
 """
+from repro.pipeline.artifact import load_artifact, save_artifact
 from repro.pipeline.compile import CompiledCNN, compile_cnn
 from repro.pipeline.plan_table import PlanTable, load_plan
 from repro.pipeline.spec import (ExecutionSpec, Placement, Precision,
@@ -16,6 +17,6 @@ from repro.pipeline.spec import (ExecutionSpec, Placement, Precision,
 
 __all__ = [
     "CompiledCNN", "ExecutionSpec", "Placement", "PlanTable", "Precision",
-    "Serving", "Tiling", "compile_cnn", "load_plan", "resolve_config",
-    "spec_from_config",
+    "Serving", "Tiling", "compile_cnn", "load_artifact", "load_plan",
+    "resolve_config", "save_artifact", "spec_from_config",
 ]

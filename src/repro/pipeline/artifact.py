@@ -1,0 +1,228 @@
+"""The committed serving artifact: one ``CompiledCNN`` as files.
+
+``CompiledCNN.save(dir)`` snapshots everything the compile phase
+resolved — params (fp32 or fixed-point), the frozen :class:`PlanTable`,
+and the :class:`ExecutionSpec` + resolved CNNConfig — as ONE directory
+under the checkpoint subsystem's crash-safety protocol
+(``repro.ckpt.checkpoint.commit_dir``: stage into ``<dir>.tmp``, stamp
+``_COMMITTED``, rename). A crash mid-save leaves ignorable wreckage,
+never a half-artifact a recovering replica would trust.
+
+Layout:  <dir>/
+            manifest.json     - format, cfg, spec, params manifest
+                                (per-array leaf index, shape, dtype)
+            plan_table.json   - PlanTable canonical JSON (byte-stable)
+            leaf_<i>.npy      - one file per params array
+            _COMMITTED        - commit marker (written last)
+
+``CompiledCNN.load(dir)`` rebuilds the compiled object through
+``compile_cnn(cfg, spec, params, plans=table)`` — the loaded plan table
+pre-seeds the autotune registries, so a warm load performs ZERO DSE
+sweeps (``autotune.sweep_stats`` proves it). This artifact is also what
+the serving fleet's fault model charges for: a failed replica's modeled
+restore latency is the cost of re-reading exactly these bytes.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointError, commit_dir
+from repro.core.config import CNNConfig, ConvLayer
+from repro.pipeline.plan_table import PlanTable
+from repro.pipeline.spec import (ExecutionSpec, Placement, Precision,
+                                 Serving, Tiling)
+
+_FORMAT = 1
+# per-QuantLayer array slots, in the fixed on-disk order
+_QUANT_ARRAYS = ("w_q", "w_scale", "scale", "b")
+
+
+# -- config / spec <-> plain dicts ------------------------------------------
+
+def _layer_to_dict(l: ConvLayer) -> dict:
+    d = {"kind": l.kind, "out_ch": l.out_ch, "kernel": l.kernel,
+         "stride": l.stride, "pad": l.pad, "groups": l.groups,
+         "pool": l.pool, "relu": l.relu, "fuse_pool": None}
+    if l.fuse_pool is not None:
+        d["fuse_pool"] = _layer_to_dict(l.fuse_pool)
+    return d
+
+
+def _layer_from_dict(d: dict) -> ConvLayer:
+    fp = d.get("fuse_pool")
+    return ConvLayer(kind=d["kind"], out_ch=d["out_ch"], kernel=d["kernel"],
+                     stride=d["stride"], pad=d["pad"], groups=d["groups"],
+                     pool=d["pool"], relu=d["relu"],
+                     fuse_pool=_layer_from_dict(fp) if fp else None)
+
+
+def cfg_to_dict(cfg: CNNConfig) -> dict:
+    d = {f: getattr(cfg, f) for f in (
+        "name", "input_hw", "input_ch", "n_classes", "vec_size", "cu_num",
+        "use_lrn", "dtype", "quant", "calib", "oh_blk", "autotune",
+        "vmem_budget", "b_blk", "serve_batch", "replicas", "pp_stages",
+        "serve_microbatches", "max_queue")}
+    d["layers"] = [_layer_to_dict(l) for l in cfg.layers]
+    return d
+
+
+def cfg_from_dict(d: dict) -> CNNConfig:
+    d = dict(d)
+    layers = tuple(_layer_from_dict(l) for l in d.pop("layers"))
+    return CNNConfig(layers=layers, **d)
+
+
+def spec_to_dict(spec: ExecutionSpec) -> dict:
+    import dataclasses
+    return dataclasses.asdict(spec)
+
+
+def spec_from_dict(d: dict) -> ExecutionSpec:
+    return ExecutionSpec(precision=Precision(**d["precision"]),
+                         tiling=Tiling(**d["tiling"]),
+                         placement=Placement(**d["placement"]),
+                         serving=Serving(**d["serving"]),
+                         use_pallas=d["use_pallas"],
+                         interpret=d["interpret"])
+
+
+# -- params <-> leaf files ---------------------------------------------------
+
+def _host(a) -> np.ndarray:
+    return np.asarray(jax.device_get(a))
+
+
+def _params_manifest(params) -> Tuple[dict, List[np.ndarray]]:
+    """Flatten params into (manifest dict, ordered leaf arrays).
+
+    Explicit per-layer layout instead of a jax treedef string: the
+    treedef of a registered pytree (``QuantizedCNNParams``) is not
+    reconstructable from its repr, and the artifact must be readable by
+    a fresh process. fp32 params are the per-layer ``{"w","b"}`` dict
+    list; quantized params serialize each ``QuantLayer``'s float aux
+    fields inline and its arrays as leaf files in ``_QUANT_ARRAYS``
+    order.
+    """
+    from repro.quant.calibrate import QuantizedCNNParams
+
+    leaves: List[np.ndarray] = []
+
+    def push(a) -> int:
+        leaves.append(_host(a))
+        return len(leaves) - 1
+
+    if isinstance(params, QuantizedCNNParams):
+        man: dict = {"format": "int8", "in_scale": float(params.in_scale),
+                     "layers": []}
+        for ql in params.layers:
+            if ql is None:
+                man["layers"].append(None)
+                continue
+            man["layers"].append({
+                "kind": ql.kind, "x_scale": float(ql.x_scale),
+                "y_scale": (None if ql.y_scale is None
+                            else float(ql.y_scale)),
+                "arrays": {k: (None if getattr(ql, k) is None
+                               else push(getattr(ql, k)))
+                           for k in _QUANT_ARRAYS}})
+    else:
+        man = {"format": "fp32", "layers": []}
+        for p in params:
+            if p is None:
+                man["layers"].append(None)
+            else:
+                man["layers"].append({"w": push(p["w"]), "b": push(p["b"])})
+    man["leaves"] = [{"shape": list(a.shape), "dtype": str(a.dtype)}
+                     for a in leaves]
+    return man, leaves
+
+
+def _load_leaf(root: Path, i: int, meta: dict):
+    try:
+        a = np.load(root / f"leaf_{i}.npy")
+    except Exception as e:
+        raise CheckpointError(
+            f"artifact {root}: leaf {i} (leaf_{i}.npy) is unreadable — "
+            f"truncated or corrupt write? ({type(e).__name__}: {e})") from e
+    if list(a.shape) != meta["shape"] or str(a.dtype) != meta["dtype"]:
+        raise CheckpointError(
+            f"artifact {root}: leaf {i} is {a.dtype}{tuple(a.shape)} but "
+            f"the manifest says {meta['dtype']}{tuple(meta['shape'])}")
+    return a
+
+
+def _params_from_manifest(root: Path, man: dict):
+    from repro.quant.calibrate import QuantLayer, QuantizedCNNParams
+
+    metas = man["leaves"]
+    if man["format"] == "fp32":
+        out: List[Optional[dict]] = []
+        for entry in man["layers"]:
+            if entry is None:
+                out.append(None)
+            else:
+                out.append({"w": _load_leaf(root, entry["w"],
+                                            metas[entry["w"]]),
+                            "b": _load_leaf(root, entry["b"],
+                                            metas[entry["b"]])})
+        return out
+    layers: List[Optional[QuantLayer]] = []
+    for entry in man["layers"]:
+        if entry is None:
+            layers.append(None)
+            continue
+        arrs = {k: (None if idx is None
+                    else _load_leaf(root, idx, metas[idx]))
+                for k, idx in entry["arrays"].items()}
+        layers.append(QuantLayer(kind=entry["kind"],
+                                 x_scale=entry["x_scale"],
+                                 y_scale=entry["y_scale"], **arrs))
+    return QuantizedCNNParams(layers=layers, in_scale=man["in_scale"])
+
+
+# -- the artifact ------------------------------------------------------------
+
+def save_artifact(path: str, *, cfg: CNNConfig, spec: ExecutionSpec,
+                  params, plan_table: PlanTable) -> Path:
+    """Commit one serving artifact at ``path`` (atomic; see module doc)."""
+    pman, leaves = _params_manifest(params)
+    manifest = {"format": _FORMAT, "cfg": cfg_to_dict(cfg),
+                "spec": spec_to_dict(spec), "params": pman}
+
+    def write(tmp: Path) -> None:
+        for i, a in enumerate(leaves):
+            np.save(tmp / f"leaf_{i}.npy", a)
+        (tmp / "plan_table.json").write_text(plan_table.to_json())
+        (tmp / "manifest.json").write_text(
+            json.dumps(manifest, sort_keys=True, indent=1) + "\n")
+
+    return commit_dir(Path(path), write)
+
+
+def load_artifact(path: str, *, with_engine: bool = True):
+    """Rebuild a :class:`~repro.pipeline.compile.CompiledCNN` from a
+    committed artifact. The plan table pre-seeds the autotune registries,
+    so the re-compile performs zero DSE sweeps."""
+    from repro.pipeline.compile import compile_cnn
+
+    root = Path(path)
+    if not (root / "_COMMITTED").exists():
+        raise CheckpointError(
+            f"{root} is not a committed artifact (no _COMMITTED marker — "
+            "crashed save, or not an artifact directory)")
+    manifest = json.loads((root / "manifest.json").read_text())
+    if manifest.get("format") != _FORMAT:
+        raise CheckpointError(
+            f"artifact {root}: format {manifest.get('format')!r}, this "
+            f"reader understands {_FORMAT}")
+    cfg = cfg_from_dict(manifest["cfg"])
+    spec = spec_from_dict(manifest["spec"])
+    params = _params_from_manifest(root, manifest["params"])
+    table = PlanTable.from_json((root / "plan_table.json").read_text())
+    return compile_cnn(cfg, spec, params, plans=table,
+                       with_engine=with_engine)

@@ -194,19 +194,22 @@ class CompiledCNN:
                        use_pallas=self.spec.use_pallas,
                        plans=self.group_plans)
 
-    def serve(self, requests: List):
+    def serve(self, requests: List, *, faults=None):
         """Drain a request stream through the compiled fleet.
 
         Returns the :class:`~repro.serve.report.FleetReport`; the
         per-request :class:`~repro.serve.router.Completion` list rides on
-        ``report.completions``.
+        ``report.completions``. ``faults`` (a
+        :class:`~repro.serve.faults.FaultSchedule`) injects replica
+        fail/recover chaos into the run — requests lost to a failure
+        retry per ``spec.serving.retries``/``backoff``.
         """
         if self.engine is None:
             from repro.serve.engine import ServeEngine
             self.engine = ServeEngine.from_spec(self.cfg, self.params,
                                                 self.spec)
         with self._ctx():
-            done, rep = self.engine.serve(requests)
+            done, rep = self.engine.serve(requests, faults=faults)
         rep.completions = done
         return rep
 
@@ -224,6 +227,29 @@ class CompiledCNN:
         return self.plan_table.save(path)
 
     load_plan = staticmethod(load_plan)
+
+    def save(self, path: str):
+        """Snapshot this compiled pipeline as ONE committed artifact —
+        params + plan table + spec under the checkpoint subsystem's
+        crash-safety protocol (``_COMMITTED`` marker, atomic rename).
+        See ``repro.pipeline.artifact`` for the layout. Returns the
+        artifact directory path.
+        """
+        from repro.pipeline.artifact import save_artifact
+        return save_artifact(path, cfg=self.cfg, spec=self.spec,
+                             params=self.params, plan_table=self.plan_table)
+
+    @classmethod
+    def load(cls, path: str, *, with_engine: bool = True) -> "CompiledCNN":
+        """Rebuild a :class:`CompiledCNN` from a committed artifact.
+
+        The saved plan table pre-seeds the autotune registries, so a
+        warm load performs zero DSE sweeps — this is the restore path a
+        recovering replica (and ``ServeEngine.hot_swap``) pays the
+        modeled artifact-restore latency for.
+        """
+        from repro.pipeline.artifact import load_artifact
+        return load_artifact(path, with_engine=with_engine)
 
     def __repr__(self) -> str:
         return (f"CompiledCNN({self.cfg.name}, mode={self.mode}, "

@@ -68,11 +68,23 @@ class Placement:
 
 @dataclass(frozen=True)
 class Serving:
-    """The request loop around the compiled forward."""
+    """The request loop around the compiled forward.
+
+    ``retries``/``backoff`` are the resilience contract under injected
+    replica faults (see ``repro.serve.faults``): a request lost to a
+    failure re-dispatches up to ``retries`` times, waiting
+    ``backoff * 2**(attempt-1)`` seconds before re-admission; past the
+    budget it ends as an explicit ``Completion(status="failed")``.
+    ``slo`` is a per-request latency bound the report counts violations
+    of (0 = no SLO).
+    """
     batch: int = 8                     # micro-batch queues pad requests to
     max_queue: int = 0                 # admission bound (0 = unbounded)
     clock: str = "measured"            # "measured" | "modeled"
     execute: bool = True               # False = device-free simulation
+    retries: int = 0                   # re-dispatch budget per request
+    backoff: float = 0.0               # base re-admission delay (seconds)
+    slo: float = 0.0                   # latency bound (seconds, 0 = off)
 
 
 @dataclass(frozen=True)
@@ -127,6 +139,16 @@ class ExecutionSpec:
                 "Serving.execute=False with clock='measured' is "
                 "contradictory: a device-free simulation has no wall "
                 "time to measure — use clock='modeled'")
+        if s.retries < 0:
+            raise ValueError(f"Serving.retries={s.retries}: must be >= 0")
+        if s.backoff < 0 or s.slo < 0:
+            raise ValueError(
+                f"Serving.backoff={s.backoff} / slo={s.slo}: both are "
+                "seconds >= 0")
+        if s.backoff and not s.retries:
+            raise ValueError(
+                "Serving.backoff set with retries=0 is contradictory: "
+                "backoff only delays re-admission of retried requests")
         if t.b_blk > 1 and s.batch % t.b_blk:
             raise ValueError(
                 f"Serving.batch={s.batch} is not a multiple of "

@@ -5,7 +5,9 @@ parallel stages, hybrid DP x PP) behind the :class:`ServeEngine` API.
 See ``src/repro/serve/README.md`` for the architecture and knobs;
 ``repro.launch.serve_cnn`` is the CLI.
 """
-from repro.serve.engine import ServeEngine, pipeline_logits
+from repro.serve.engine import (ServeEngine, pipeline_logits,
+                                restore_latency_model)
+from repro.serve.faults import FaultEvent, FaultSchedule
 from repro.serve.report import FleetReport, fleet_report, latency_report
 from repro.serve.router import Completion, MicroBatcher, Request, Router
 from repro.serve.stage_planner import (StagePlan, group_cost,
@@ -13,7 +15,8 @@ from repro.serve.stage_planner import (StagePlan, group_cost,
                                        total_cost)
 
 __all__ = [
-    "ServeEngine", "pipeline_logits", "FleetReport", "fleet_report",
+    "ServeEngine", "pipeline_logits", "restore_latency_model",
+    "FaultEvent", "FaultSchedule", "FleetReport", "fleet_report",
     "latency_report", "Completion", "MicroBatcher", "Request", "Router",
     "StagePlan", "group_cost", "group_io_shapes", "plan_stages",
     "total_cost",

@@ -37,9 +37,25 @@ autotuner ranks plans with — deterministic, and the basis of the
 ``fleet_vs_single`` benchmark rows. ``execute=False`` skips the actual
 forwards entirely (pure discrete-event simulation; predictions are -1),
 which is how the benchmarks model fleets without needing 8 devices.
+
+Resilience (the fault-tolerance layer): ``serve(requests,
+faults=FaultSchedule(...))`` injects replica fail/recover events into
+the loop. A failed replica loses its in-flight round (those requests
+re-dispatch against a per-request retry budget with optional
+exponential backoff; an exhausted budget ends as an explicit
+``Completion(status="failed")`` — never a stranded request), its queue
+is evacuated to the survivors, and the fleet serves degraded gang
+rounds until the replica recovers — restore is charged the modeled
+latency of reloading the committed ``CompiledCNN`` artifact.
+``hot_swap(artifact)`` registers a rolling upgrade the same loop
+executes: replicas drain and swap one at a time, evacuated requests
+re-dispatch for free (a graceful drain loses no work), and each
+completion records which version served it.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import time
 from typing import List, Optional, Tuple
 
@@ -52,9 +68,30 @@ from repro.models.cnn import (cnn_forward, cnn_forward_stage,
                               cnn_forward_stage_quant)
 from repro.parallel.pipeline_par import pipeline_forward_stages
 from repro.parallel.sharding import batch_sharding
+from repro.serve.faults import FaultSchedule
 from repro.serve.report import FleetReport, fleet_report
 from repro.serve.router import Completion, Request, Router
 from repro.serve.stage_planner import StagePlan, plan_stages, total_cost
+
+# Modeled artifact-restore cost: a recovering (or hot-swapping) replica
+# reloads params + plan table from the committed artifact before
+# rejoining dispatch. Charged to the simulated clock at a fixed restore
+# bandwidth plus a constant reattach overhead — deterministic, like the
+# roofline service times.
+RESTORE_BW_BYTES_S = 2e9               # committed-artifact read bandwidth
+RESTORE_OVERHEAD_S = 5e-3              # process reattach / jit-cache warm
+
+
+def params_nbytes(params) -> int:
+    """Total bytes of a params pytree (fp32 list or QuantizedCNNParams)
+    — the payload of a serialized artifact, hence of a modeled restore."""
+    return int(sum(np.asarray(jax.device_get(l)).nbytes
+                   for l in jax.tree_util.tree_leaves(params)))
+
+
+def restore_latency_model(n_bytes: int) -> float:
+    """Seconds to restore a replica from an ``n_bytes`` artifact."""
+    return n_bytes / RESTORE_BW_BYTES_S + RESTORE_OVERHEAD_S
 
 
 def _prod(shape) -> int:
@@ -137,10 +174,15 @@ class ServeEngine:
                  replicas: int = 1, pp_stages: int = 1,
                  n_microbatches: int = 0, use_pallas: bool = True,
                  clock: str = "measured", max_queue: int = 0,
-                 execute: bool = True):
+                 execute: bool = True, retries: int = 0,
+                 backoff: float = 0.0, slo: float = 0.0):
         from repro.quant.calibrate import QuantizedCNNParams
         if clock not in ("measured", "modeled"):
             raise ValueError(f"unknown clock {clock!r}")
+        if retries < 0:
+            raise ValueError(f"retries={retries} must be >= 0")
+        if backoff < 0 or slo < 0:
+            raise ValueError("backoff/slo are seconds >= 0")
         self.cfg = cfg
         self.params = params
         self.quant = isinstance(params, QuantizedCNNParams)
@@ -151,6 +193,9 @@ class ServeEngine:
         self.use_pallas = use_pallas
         self.clock_mode = clock
         self.execute = execute
+        self.retries = int(retries)
+        self.backoff = float(backoff)
+        self.slo = float(slo)
         R, S = replicas, pp_stages
         if R < 1 or S < 1:
             raise ValueError("replicas and pp_stages must be >= 1")
@@ -193,6 +238,16 @@ class ServeEngine:
         self.mb = batch // self.n_micro
         self.router = Router(R, batch, max_queue=max_queue)
         self.mesh = None
+        # -- version bookkeeping (hot_swap installs version 1, 2, ...) -----
+        self.t_restore_model = restore_latency_model(params_nbytes(params))
+        self._cur_version = 0
+        self._n_versions = 1
+        self._versions = {0: dict(params=params, quant=self.quant, cfg=cfg,
+                                  stage_plan=self.stage_plan,
+                                  t_round=self.t_round_model,
+                                  t_restore=self.t_restore_model)}
+        self._pending_swap = None
+        self._round_fns = {}
         self._round_fn = None
         if execute:
             if R * S > 1:
@@ -203,7 +258,7 @@ class ServeEngine:
                         f"--xla_force_host_platform_device_count={R * S}")
                 from repro.launch.mesh import compat_make_mesh
                 self.mesh = compat_make_mesh((R, S), ("data", "pipe"))
-            self._round_fn = self._build_round_fn()
+            self._round_fn = self._round_fns[0] = self._build_round_fn()
 
     @classmethod
     def from_spec(cls, cfg: CNNConfig, params, spec) -> "ServeEngine":
@@ -217,12 +272,25 @@ class ServeEngine:
                    n_microbatches=spec.placement.microbatches,
                    use_pallas=spec.use_pallas, clock=spec.serving.clock,
                    max_queue=spec.serving.max_queue,
-                   execute=spec.serving.execute)
+                   execute=spec.serving.execute,
+                   retries=getattr(spec.serving, "retries", 0),
+                   backoff=getattr(spec.serving, "backoff", 0.0),
+                   slo=getattr(spec.serving, "slo", 0.0))
 
     # -- forward builders --------------------------------------------------
 
-    def _build_round_fn(self):
-        cfg, params = self.cfg, self.params
+    def _build_round_fn(self, params=None, quant=None, stage_plan=None,
+                        cfg=None):
+        """Gang-round fn ``imgs -> preds`` for one params version.
+
+        With no arguments this builds the originally-compiled version;
+        ``hot_swap`` builds the replacement's fn from its own params /
+        stage plan (same mesh, same microbatch split — only the weights
+        and their dtype change under a rolling upgrade).
+        """
+        params = self.params if params is None else params
+        quant = self.quant if quant is None else quant
+        cfg = self.cfg if cfg is None else cfg
         R = self.replicas
 
         if self.pp_stages == 1:
@@ -239,15 +307,23 @@ class ServeEngine:
                 return fn(sharded)
             return dp_round
 
-        sp = self.stage_plan
+        sp = self.stage_plan if stage_plan is None else stage_plan
 
         def pp_fn(imgs_flat):           # (n_micro*R*mb, H, W, C)
             logits = pipeline_logits(
                 params, imgs_flat, cfg, self.mesh, sp,
                 n_microbatches=self.n_micro, use_pallas=self.use_pallas,
-                quant=self.quant, dp_axis="data")
+                quant=quant, dp_axis="data")
             return jnp.argmax(logits, -1)
         return jax.jit(pp_fn)
+
+    def _version_fn(self, v: int):
+        if v not in self._round_fns:
+            rec = self._versions[v]
+            self._round_fns[v] = self._build_round_fn(
+                params=rec["params"], quant=rec["quant"],
+                stage_plan=rec["stage_plan"], cfg=rec["cfg"])
+        return self._round_fns[v]
 
     def _pack(self, round_items) -> np.ndarray:
         """Super-batch for one gang round.
@@ -276,9 +352,77 @@ class ServeEngine:
             return p.transpose(1, 0, 2).reshape(self.replicas, self.batch)
         return preds.reshape(self.replicas, self.batch)
 
+    # -- rolling hot swap --------------------------------------------------
+
+    def hot_swap(self, artifact, *, at: float = 0.0) -> int:
+        """Register a rolling upgrade to ``artifact``'s params.
+
+        ``artifact`` is a ``CompiledCNN`` (``.quant`` params win over
+        ``.params`` when present, matching how it serves) or a bare
+        params pytree. The next ``serve`` call executes the roll inside
+        its discrete-event loop, starting at simulated time ``at``:
+        replicas leave dispatch one at a time, finish their in-flight
+        round (a graceful drain — evacuated queue entries re-dispatch
+        WITHOUT consuming retry budget, so no request is ever dropped by
+        an upgrade), pay the modeled artifact-restore latency, and
+        rejoin serving the new version. Completions record the serving
+        ``version``; once every replica has rolled, the engine adopts
+        the new params as its compiled state. Returns the version id.
+        """
+        from repro.quant.calibrate import QuantizedCNNParams
+        if self._pending_swap is not None:
+            raise RuntimeError("a hot_swap is already registered; serve a "
+                               "stream to complete it first")
+        new_cfg = getattr(artifact, "cfg", self.cfg)
+        new_params = getattr(artifact, "params", artifact)
+        for f in ("input_hw", "input_ch", "n_classes"):
+            if getattr(new_cfg, f) != getattr(self.cfg, f):
+                raise ValueError(
+                    f"hot_swap artifact is incompatible with the serving "
+                    f"fleet: {f}={getattr(new_cfg, f)} vs "
+                    f"{getattr(self.cfg, f)}")
+        quant = isinstance(new_params, QuantizedCNNParams)
+        dtype = "int8" if quant else new_cfg.dtype
+        if self.pp_stages > 1:
+            # same microbatch split, rebalanced stages for the new dtype
+            sp = plan_stages(new_cfg, self.pp_stages, batch=self.mb,
+                             dtype=dtype)
+            t_round = sp.round_time(self.n_micro)
+        else:
+            sp = None
+            t_round = total_cost(new_cfg, self.batch, dtype=dtype)
+        v = self._n_versions
+        self._n_versions += 1
+        self._versions[v] = dict(params=new_params, quant=quant,
+                                 cfg=new_cfg, stage_plan=sp,
+                                 t_round=t_round,
+                                 t_restore=restore_latency_model(
+                                     params_nbytes(new_params)))
+        self._pending_swap = {"state": "armed", "at": float(at),
+                              "version": v,
+                              "t_restore": self._versions[v]["t_restore"],
+                              "todo": [], "current": None}
+        return v
+
+    def _adopt_version(self, v: int) -> None:
+        """Make version ``v`` the engine's compiled state (the roll is
+        complete: subsequent ``serve`` calls start fully on ``v``)."""
+        rec = self._versions[v]
+        self.params = rec["params"]
+        self.quant = rec["quant"]
+        self.cfg = rec["cfg"]
+        self.dtype = "int8" if rec["quant"] else rec["cfg"].dtype
+        self.stage_plan = rec["stage_plan"]
+        self.t_round_model = rec["t_round"]
+        self.t_restore_model = rec["t_restore"]
+        self._cur_version = v
+        if self.execute:
+            self._round_fn = self._version_fn(v)
+
     # -- the serving loop --------------------------------------------------
 
-    def serve(self, requests: List[Request]
+    def serve(self, requests: List[Request], *,
+              faults: Optional[FaultSchedule] = None
               ) -> Tuple[List[Completion], FleetReport]:
         """Drain a request stream; returns (completions, fleet report).
 
@@ -286,49 +430,263 @@ class ServeEngine:
         policy + admission control), gang-drain one padded micro-batch
         per replica, advance the clock by the round's service time —
         concurrent across replicas, exactly the mesh semantics.
+
+        ``faults`` injects replica fail/recover events (see
+        ``repro.serve.faults``): a fail that lands inside a round loses
+        that replica's in-flight requests — they re-dispatch against
+        their per-request retry budget (``retries``, with exponential
+        ``backoff`` on re-admission); an exhausted budget becomes an
+        explicit ``Completion(status="failed")``. The fleet serves
+        degraded rounds over the survivors until recovery (charged the
+        modeled artifact-restore latency). A registered ``hot_swap``
+        rolls through the same loop. Invariant: every admitted request
+        ends as exactly one Completion or one admission rejection —
+        never stranded, even if the whole fleet dies.
         """
+        R = self.replicas
+        if faults is not None:
+            faults.validate_for(R)
         router = self.router
         done: List[Completion] = []
-        busy = [0.0] * self.replicas
+        busy = [0.0] * R
         clock, rounds = 0.0, 0
         pending = sorted(requests, key=lambda r: r.t_arrival)
-        compiled = not self.execute
-        while pending or router.backlog():
-            while pending and pending[0].t_arrival <= clock:
-                router.dispatch(pending.pop(0))
+        compiled_vs = set()
+
+        up = [True] * R
+        version = [self._cur_version] * R
+        attempts = {}                   # rid -> losses charged so far
+        retry_q: list = []              # (t_ready, seq, Request)
+        events: list = []               # (t, seq, kind, replica)
+        seq = itertools.count()
+        fail_t = {}                     # replica -> time its failure landed
+        ttr: List[float] = []
+        swapped = set()
+        ctr = {"retries": 0, "failures": 0, "recoveries": 0,
+               "degraded": 0, "swapped": 0}
+
+        fault_it = iter(faults) if faults is not None else iter(())
+        next_fault = next(fault_it, None)
+
+        def pull_faults(t):
+            # materialize schedule events up to t (lazy: MTBF streams
+            # are infinite); a recovery becomes an "up" event only after
+            # the modeled restore of the artifact the replica will load
+            nonlocal next_fault
+            while next_fault is not None and next_fault.t <= t:
+                e, next_fault = next_fault, next(fault_it, None)
+                if e.kind == "fail":
+                    heapq.heappush(events,
+                                   (e.t, next(seq), "fail", e.replica))
+                else:
+                    t_up = e.t + self._versions[
+                        version[e.replica]]["t_restore"]
+                    heapq.heappush(events,
+                                   (t_up, next(seq), "up", e.replica))
+
+        def readmit(req, t, charge=True):
+            # lost/evacuated-by-failure requests consume retry budget;
+            # a graceful swap drain re-admits for free (charge=False)
+            if not charge:
+                heapq.heappush(retry_q, (t, next(seq), req))
+                return
+            a = attempts.get(req.rid, 0) + 1
+            attempts[req.rid] = a
+            if a > self.retries:
+                done.append(Completion(
+                    rid=req.rid, pred=-1, t_arrival=req.t_arrival,
+                    t_done=t, replica=-1, status="failed",
+                    attempts=a - 1))
+                return
+            ctr["retries"] += 1
+            delay = self.backoff * (2 ** (a - 1)) if self.backoff else 0.0
+            heapq.heappush(retry_q, (t + delay, next(seq), req))
+
+        def start_next_swap(t):
+            sw = self._pending_swap
+            while sw["todo"] and sw["current"] is None:
+                r = sw["todo"].pop(0)
+                if not up[r]:
+                    # a down replica restores from the new artifact when
+                    # its recovery lands — no drain needed
+                    version[r] = sw["version"]
+                    swapped.add(r)
+                    ctr["swapped"] += 1
+                    continue
+                up[r] = False
+                for req in router.evacuate(r):
+                    readmit(req, t, charge=False)
+                heapq.heappush(events,
+                               (t + sw["t_restore"], next(seq),
+                                "swapped", r))
+                sw["current"] = r
+            if not sw["todo"] and sw["current"] is None:
+                sw["state"] = "done"
+
+        def maybe_start_swap(t):
+            sw = self._pending_swap
+            if sw is None or sw["state"] != "armed" or t < sw["at"]:
+                return
+            sw["state"] = "rolling"
+            sw["todo"] = list(range(R))
+            sw["current"] = None
+            start_next_swap(t)
+
+        def handle_event(kind, r, t_e, serving=None):
+            sw = self._pending_swap
+            if kind == "fail":
+                if not up[r]:
+                    return              # already down (restoring/swapping)
+                up[r] = False
+                ctr["failures"] += 1
+                fail_t[r] = t_e
+                if serving is not None and r not in serving["lost"]:
+                    take = serving["take"].get(r) or ()
+                    if take:            # the in-flight round is lost
+                        serving["lost"].add(r)
+                        busy[r] += t_e - serving["t0"]
+                        for req in take:
+                            readmit(req, t_e)
+                for req in router.evacuate(r):
+                    readmit(req, t_e)
+            elif kind == "up":
+                if up[r]:
+                    return
+                if sw is not None and sw.get("current") == r:
+                    return              # the swap's restore owns r
+                up[r] = True
+                ctr["recoveries"] += 1
+                if r in fail_t:
+                    ttr.append(t_e - fail_t.pop(r))
+            elif kind == "swapped":
+                version[r] = sw["version"]
+                up[r] = True
+                swapped.add(r)
+                ctr["swapped"] += 1
+                fail_t.pop(r, None)
+                sw["current"] = None
+                start_next_swap(t_e)
+
+        while True:
+            pull_faults(clock)
+            while events and events[0][0] <= clock:
+                t_e, _, kind, r = heapq.heappop(events)
+                handle_event(kind, r, t_e)
+            maybe_start_swap(clock)
+            if any(up):
+                while pending and pending[0].t_arrival <= clock:
+                    router.dispatch(pending.pop(0), up)
+                while retry_q and retry_q[0][0] <= clock:
+                    _, _, req = heapq.heappop(retry_q)
+                    router.dispatch(req, up)
             if not router.backlog():
-                if not pending:
+                if not pending and not retry_q:
                     break
-                clock = pending[0].t_arrival
+                # outstanding work, nothing dispatchable: jump the clock
+                # to whatever unblocks first (all candidates are > clock:
+                # admission above exhausted everything due, pull_faults
+                # everything scheduled)
+                cands = []
+                if any(up):
+                    if pending:
+                        cands.append(pending[0].t_arrival)
+                    if retry_q:
+                        cands.append(retry_q[0][0])
+                if events:
+                    cands.append(events[0][0])
+                if next_fault is not None:
+                    cands.append(next_fault.t)
+                if not cands:
+                    # dead fleet, no recovery scheduled: fail every
+                    # outstanding request explicitly — none stranded
+                    for req in pending + [e[2] for e in retry_q]:
+                        done.append(Completion(
+                            rid=req.rid, pred=-1,
+                            t_arrival=req.t_arrival,
+                            t_done=max(clock, req.t_arrival), replica=-1,
+                            status="failed",
+                            attempts=attempts.get(req.rid, 0)))
+                    pending, retry_q = [], []
+                    break
+                clock = max(clock, min(cands))
                 continue
-            round_items = router.drain_round()
+            # ---- one gang round over the surviving replica set ----------
+            round_items = router.drain_round(up)
+            up_at_drain = list(up)
+            version_at_drain = list(version)
+            need = sorted({version_at_drain[r]
+                           for r, _, _, n_real in round_items if n_real})
             t_wall = 0.0
             if self.execute:
                 imgs = jnp.asarray(self._pack(round_items))
-                if not compiled:        # compile outside the clock
-                    np.asarray(self._round_fn(imgs))
-                    compiled = True
+                for v in need:
+                    fn = self._version_fn(v)
+                    if v not in compiled_vs:   # compile outside the clock
+                        np.asarray(fn(imgs))
+                        compiled_vs.add(v)
                 t0 = time.perf_counter()
-                preds = self._unpack_preds(np.asarray(self._round_fn(imgs)))
+                preds_by_v = {v: self._unpack_preds(
+                    np.asarray(self._round_fns[v](imgs))) for v in need}
                 t_wall = time.perf_counter() - t0
             else:
-                preds = np.full((self.replicas, self.batch), -1)
-            t_service = (self.t_round_model
+                preds_by_v = {v: np.full((R, self.batch), -1)
+                              for v in need}
+            t_service = (max(self._versions[v]["t_round"] for v in need)
                          if self.clock_mode == "modeled" else t_wall)
-            clock += t_service
+            t_end = clock + t_service
             rounds += 1
+            if not all(up_at_drain):
+                ctr["degraded"] += 1
+            # fault/swap events landing inside (clock, t_end] hit the
+            # round in flight: a failing replica's take is lost mid-round
+            serving = {"t0": clock, "lost": set(),
+                       "take": {r: take for r, take, _, _ in round_items}}
+            pull_faults(t_end)
+            while events and events[0][0] <= t_end:
+                t_e, _, kind, r = heapq.heappop(events)
+                handle_event(kind, r, t_e, serving=serving)
+            lost = serving["lost"]
+            any_real = any(n for _, _, _, n in round_items)
             for r, take, _, n_real in round_items:
-                if n_real:
+                if r in lost:
+                    continue
+                if self.pp_stages > 1:
+                    # every up replica's devices compute the padded
+                    # super-batch rows of a pp/hybrid round, real rows
+                    # or not — utilization must say so
+                    if up_at_drain[r] and any_real:
+                        busy[r] += t_service
+                elif n_real:
                     busy[r] += t_service
-                for req, pred in zip(take, preds[r][:n_real]):
+                if not take:            # idle/down replica this round
+                    continue
+                v = version_at_drain[r]
+                for req, pred in zip(take, preds_by_v[v][r][:n_real]):
                     done.append(Completion(
                         rid=req.rid, pred=int(pred),
-                        t_arrival=req.t_arrival, t_done=clock, replica=r))
+                        t_arrival=req.t_arrival, t_done=t_end, replica=r,
+                        version=v, attempts=attempts.get(req.rid, 0)))
+            clock = t_end
+
+        sw = self._pending_swap
+        if sw is not None:
+            # the stream ended before the roll finished: finalize the
+            # remaining version flips without extending the makespan
+            for r in range(R):
+                if r not in swapped:
+                    swapped.add(r)
+                    ctr["swapped"] += 1
+            self._adopt_version(sw["version"])
+            self._pending_swap = None
         rep = fleet_report(
             done, router.rejected, mode=self.mode, replicas=self.replicas,
             pp_stages=self.pp_stages, batch=self.batch,
             clock=self.clock_mode, rounds=rounds, busy_s=busy,
             makespan_s=clock,
             bubble_fraction=(self.stage_plan.bubble(self.n_micro)
-                             if self.stage_plan else 0.0))
+                             if self.stage_plan else 0.0),
+            n_retries=ctr["retries"], n_failures=ctr["failures"],
+            n_recoveries=ctr["recoveries"], degraded_rounds=ctr["degraded"],
+            time_to_recover_s=ttr, n_swapped=ctr["swapped"],
+            slo_s=self.slo)
         return done, rep

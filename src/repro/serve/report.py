@@ -43,8 +43,12 @@ def latency_report(done: List) -> dict:
     ``.t_done``. Hardened: an empty list yields a well-formed report
     (n=0, zero throughput, NaN percentiles) so callers can always
     format/serialise the result — draining an empty queue is a normal
-    serving condition, not an error.
+    serving condition, not an error. Completions carrying
+    ``status="failed"`` (retry budget exhausted under injected faults)
+    are excluded: they were never served, so they have no service
+    latency and don't count toward throughput.
     """
+    done = [c for c in done if getattr(c, "status", "ok") == "ok"]
     if not done:
         return {"n": 0, "throughput": 0.0,
                 "p50_ms": float("nan"), "p95_ms": float("nan")}
@@ -73,6 +77,16 @@ class FleetReport:
     makespan_s: float = 0.0
     utilization: List[float] = field(default_factory=list)  # per replica
     bubble_fraction: float = 0.0       # GPipe fill/drain share (pp modes)
+    # -- fault / recovery accounting (the resilience layer) ---------------
+    n_failed: int = 0                  # retry budget exhausted -> "failed"
+    n_retries: int = 0                 # re-dispatches charged to budgets
+    n_failures: int = 0                # replica fail events that landed
+    n_recoveries: int = 0              # replicas restored into dispatch
+    degraded_rounds: int = 0           # rounds with < replicas alive
+    time_to_recover_s: List[float] = field(default_factory=list)
+    n_swapped: int = 0                 # replicas rolled by hot_swap
+    slo_s: float = 0.0                 # per-request latency bound (0=off)
+    slo_violations: int = 0            # ok completions over the bound
     # per-request Completion list — populated by CompiledCNN.serve (the
     # compile-once API returns ONE report object); excluded from
     # to_dict so serialised reports stay summary-sized
@@ -96,18 +110,39 @@ class FleetReport:
         rej = f", {self.n_rejected} rejected" if self.n_rejected else ""
         bub = (f", bubble {self.bubble_fraction:.0%}"
                if self.pp_stages > 1 else "")
+        chaos = ""
+        if self.n_failures or self.n_failed or self.n_retries:
+            ttr = (f", TTR {max(self.time_to_recover_s) * 1e3:.0f} ms"
+                   if self.time_to_recover_s else "")
+            chaos = (f" | chaos: {self.n_failures} failures, "
+                     f"{self.n_recoveries} recoveries, "
+                     f"{self.degraded_rounds} degraded rounds, "
+                     f"{self.n_retries} retries, {self.n_failed} failed"
+                     f"{ttr}")
+        swap = (f" | hot-swap: {self.n_swapped} replicas rolled"
+                if self.n_swapped else "")
+        slo = (f", SLO({self.slo_s * 1e3:.0f} ms) violations "
+               f"{self.slo_violations}" if self.slo_s else "")
         return (f"[{self.mode}] {self.n_done} served in {self.rounds} "
                 f"rounds ({self.clock} clock): {self.throughput:.1f} img/s, "
                 f"p50 {self.p50_ms:.1f} ms, p95 {self.p95_ms:.1f} ms"
-                f"{util}{rej}{bub}")
+                f"{util}{rej}{bub}{slo}{chaos}{swap}")
 
 
 def fleet_report(done: List, rejected: List, *, mode: str, replicas: int,
                  pp_stages: int, batch: int, clock: str, rounds: int,
                  busy_s: Sequence[float], makespan_s: float,
-                 bubble_fraction: float = 0.0) -> FleetReport:
+                 bubble_fraction: float = 0.0, n_retries: int = 0,
+                 n_failures: int = 0, n_recoveries: int = 0,
+                 degraded_rounds: int = 0,
+                 time_to_recover_s: Sequence[float] = (),
+                 n_swapped: int = 0, slo_s: float = 0.0) -> FleetReport:
     """Assemble the fleet report from an engine run's accounting."""
     lat = latency_report(done)
+    failed = [c for c in done if getattr(c, "status", "ok") == "failed"]
+    slo_violations = (sum(1 for c in done
+                          if getattr(c, "status", "ok") == "ok"
+                          and c.latency > slo_s) if slo_s > 0 else 0)
     return FleetReport(
         mode=mode, replicas=replicas, pp_stages=pp_stages, batch=batch,
         clock=clock, n_done=lat["n"], n_rejected=len(rejected),
@@ -116,4 +151,8 @@ def fleet_report(done: List, rejected: List, *, mode: str, replicas: int,
         p50_ms=lat["p50_ms"], p95_ms=lat["p95_ms"], makespan_s=makespan_s,
         utilization=[b / makespan_s if makespan_s > 0 else 0.0
                      for b in busy_s],
-        bubble_fraction=bubble_fraction)
+        bubble_fraction=bubble_fraction, n_failed=len(failed),
+        n_retries=n_retries, n_failures=n_failures,
+        n_recoveries=n_recoveries, degraded_rounds=degraded_rounds,
+        time_to_recover_s=list(time_to_recover_s), n_swapped=n_swapped,
+        slo_s=slo_s, slo_violations=slo_violations)

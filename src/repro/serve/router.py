@@ -21,7 +21,7 @@ uniformly.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -37,11 +37,24 @@ class Request:
 
 @dataclass
 class Completion:
+    """One finished request.
+
+    ``status`` is ``"ok"`` for a served prediction or ``"failed"`` when
+    the request's retry budget was exhausted by replica failures (the
+    pred is then -1 and ``replica`` is the meaningless -1): every
+    admitted request ends as exactly one Completion — never stranded.
+    ``version`` counts hot-swaps: 0 = served by the originally compiled
+    params, 1 = by the artifact a rolling ``hot_swap`` installed.
+    ``attempts`` is how many times the request was re-dispatched.
+    """
     rid: int
     pred: int
     t_arrival: float
     t_done: float
     replica: int = 0
+    status: str = "ok"                 # "ok" | "failed"
+    version: int = 0
+    attempts: int = 0
 
     @property
     def latency(self) -> float:
@@ -80,9 +93,21 @@ class MicroBatcher:
             imgs = np.concatenate([imgs, pad])
         return take, jnp.asarray(imgs), n_real
 
+    def drain_all(self) -> List[Request]:
+        """Pop the whole queue unpadded — the evacuation path when this
+        replica fails or is taken down for a rolling hot-swap."""
+        take, self._q = self._q, []
+        return take
+
 
 class Router:
-    """Least-loaded dispatch over N replica queues with admission control."""
+    """Least-loaded dispatch over N replica queues with admission control.
+
+    ``alive`` (an optional per-replica boolean sequence) restricts
+    dispatch and gang drains to the surviving replica set — the fault
+    model's degraded mode. Down replicas never receive requests and
+    drain as well-formed idle entries.
+    """
 
     def __init__(self, n_replicas: int, plan_batch: int, *,
                  max_queue: int = 0):
@@ -99,20 +124,37 @@ class Router:
     def backlog(self) -> int:
         return sum(len(q) for q in self.queues)
 
-    def dispatch(self, req: Request) -> bool:
-        """Route one request; False = rejected by admission control."""
-        r = min(range(len(self.queues)), key=lambda i: (len(self.queues[i]), i))
+    def dispatch(self, req: Request,
+                 alive: Optional[Sequence[bool]] = None) -> bool:
+        """Route one request; False = rejected by admission control.
+
+        Raises if ``alive`` rules out every replica — the engine decides
+        what a fully-dead fleet means (wait for recovery or fail the
+        request), not the router.
+        """
+        cands = [i for i in range(len(self.queues))
+                 if alive is None or alive[i]]
+        if not cands:
+            raise RuntimeError("no alive replica to dispatch to")
+        r = min(cands, key=lambda i: (len(self.queues[i]), i))
         if self.max_queue and len(self.queues[r]) >= self.max_queue:
             self.rejected.append(req)
             return False
         self.queues[r].submit(req)
         return True
 
-    def drain_round(self):
+    def evacuate(self, r: int) -> List[Request]:
+        """Pop every request queued on replica ``r`` (failure/swap
+        evacuation); the caller re-dispatches them."""
+        return self.queues[r].drain_all()
+
+    def drain_round(self, alive: Optional[Sequence[bool]] = None):
         """Pop one (padded) micro-batch per replica — a gang round.
 
         Returns a list of ``(replica_id, requests, images, n_real)``;
-        idle replicas appear with ``(r, [], None, 0)`` so the caller can
-        keep the round's super-batch shape fixed.
+        idle and down replicas appear with ``(r, [], None, 0)`` so the
+        caller can keep the round's super-batch shape fixed.
         """
-        return [(r,) + q.next_batch() for r, q in enumerate(self.queues)]
+        return [(r,) + (q.next_batch() if alive is None or alive[r]
+                        else ([], None, 0))
+                for r, q in enumerate(self.queues)]

@@ -21,8 +21,10 @@ PIPELINE_SURFACE = {
     "Serving",
     "Tiling",
     "compile_cnn",
+    "load_artifact",
     "load_plan",
     "resolve_config",
+    "save_artifact",
     "spec_from_config",
 }
 
@@ -54,7 +56,7 @@ def test_ops_exports_exactly_the_contract():
 def test_compiled_cnn_runtime_surface():
     """The CompiledCNN method contract of the compile-once API."""
     for method in ("forward", "forward_stage", "serve", "plans",
-                   "save_plan", "load_plan"):
+                   "save_plan", "load_plan", "save", "load"):
         assert callable(getattr(pipeline.CompiledCNN, method, None)), \
             f"CompiledCNN.{method} missing"
 
@@ -79,7 +81,8 @@ def test_execution_spec_subspec_fields():
     assert sorted(f.name for f in dataclasses.fields(pipeline.Placement)) \
         == ["microbatches", "pp_stages", "replicas"]
     assert sorted(f.name for f in dataclasses.fields(pipeline.Serving)) \
-        == ["batch", "clock", "execute", "max_queue"]
+        == ["backoff", "batch", "clock", "execute", "max_queue",
+            "retries", "slo"]
     assert sorted(f.name for f in
                   dataclasses.fields(pipeline.ExecutionSpec)) \
         == ["interpret", "placement", "precision", "serving", "tiling",

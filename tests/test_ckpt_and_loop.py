@@ -7,7 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.ckpt.checkpoint import (CheckpointManager, latest_step,
+from repro.ckpt.checkpoint import (CheckpointError, CheckpointManager,
+                                   clean_stale_tmp, latest_step,
                                    load_checkpoint, save_checkpoint)
 from repro.configs import get_config
 from repro.core.config import ModelConfig
@@ -127,6 +128,65 @@ def test_elastic_restore_across_data_layout(tmp_path):
     assert step == 11
     for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_crashed_writer_tmp_is_invisible_and_gcd(tmp_path):
+    """A writer that died mid-commit leaves step_N.tmp (manifest + leaves
+    but no _COMMITTED, never renamed). Restore must not see it, and the
+    next scan must garbage-collect it."""
+    cfg = small_cfg()
+    state = init_train_state(KEY, cfg)
+    save_checkpoint(str(tmp_path), 5, state)
+    # simulate the crash: a fully-written staging dir that never committed
+    wreck = tmp_path / "step_00000009.tmp"
+    wreck.mkdir()
+    (wreck / "manifest.json").write_text("{}")
+    (wreck / "leaf_0.npy").write_bytes(b"\x93NUMPY partial")
+    assert latest_step(str(tmp_path)) == 5          # tmp invisible + GC'd
+    assert not wreck.exists()
+    restored, step = load_checkpoint(str(tmp_path), state)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_manager_init_cleans_stale_tmp(tmp_path):
+    (tmp_path / "step_00000002.tmp").mkdir()
+    (tmp_path / "step_00000004.tmp").mkdir()
+    CheckpointManager(str(tmp_path), keep=2)
+    assert not list(tmp_path.glob("*.tmp"))
+    # idempotent on an empty/absent dir
+    assert clean_stale_tmp(str(tmp_path / "nope")) == 0
+
+
+def test_corrupt_leaf_raises_checkpoint_error(tmp_path):
+    """A truncated leaf file must surface as CheckpointError naming the
+    checkpoint path, step, and leaf index — not a bare numpy error."""
+    cfg = small_cfg()
+    state = init_train_state(KEY, cfg)
+    p = save_checkpoint(str(tmp_path), 4, state)
+    (p / "leaf_0.npy").write_bytes(b"\x93NUMPY truncated")
+    with pytest.raises(CheckpointError) as ei:
+        load_checkpoint(str(tmp_path), state)
+    msg = str(ei.value)
+    assert "step 4" in msg and "leaf 0" in msg and str(p) in msg
+    # missing leaf file reads as the same error class
+    (p / "leaf_0.npy").unlink()
+    with pytest.raises(CheckpointError, match="leaf 0"):
+        load_checkpoint(str(tmp_path), state)
+
+
+def test_wrong_architecture_raises_checkpoint_error(tmp_path):
+    cfg = small_cfg()
+    state = init_train_state(KEY, cfg)
+    save_checkpoint(str(tmp_path), 2, state)
+    leaves = jax.tree.leaves(state)
+    with pytest.raises(CheckpointError, match="leaves"):
+        load_checkpoint(str(tmp_path), leaves[:-1])  # fewer leaves
+    # same leaf count, wrong shape on leaf 0
+    reshaped = [np.zeros((3, 3), np.float32)] + leaves[1:]
+    with pytest.raises(CheckpointError, match="leaf 0 has shape"):
+        load_checkpoint(str(tmp_path), reshaped)
 
 
 def test_data_stream_determinism():

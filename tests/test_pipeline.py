@@ -252,6 +252,72 @@ def test_compile_accepts_prequantized_params():
 
 
 # ---------------------------------------------------------------------------
+# the committed serving artifact: CompiledCNN.save / load
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip_fp32_byte_stable(tmp_path):
+    """save -> load -> save produces byte-identical plan_table.json and
+    manifest.json; params restore exactly; spec and forward agree."""
+    cfg, params, x = _setup()
+    c = compile_cnn(cfg, ExecutionSpec(serving=Serving(batch=4)), params)
+    a1 = tmp_path / "art1"
+    c.save(a1)
+    assert (a1 / "_COMMITTED").exists()
+    c2 = CompiledCNN.load(a1)
+    assert c2.spec == c.spec and c2.cfg == c.cfg
+    assert c2.plan_table.to_json() == c.plan_table.to_json()
+    for a, b in zip(jax.tree.leaves(c.params), jax.tree.leaves(c2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(c.forward(x)),
+                                  np.asarray(c2.forward(x)))
+    a2 = tmp_path / "art2"
+    c2.save(a2)
+    for f in ("plan_table.json", "manifest.json"):
+        assert (a1 / f).read_bytes() == (a2 / f).read_bytes(), f
+
+
+def test_artifact_load_is_zero_sweep(tmp_path):
+    """A loaded artifact seeds the plan registries: the warm compile
+    inside load() performs ZERO DSE sweeps."""
+    cfg, params, _ = _setup()
+    c = compile_cnn(cfg, ExecutionSpec(serving=Serving(batch=4)), params)
+    c.save(tmp_path / "art")
+    autotune.clear_registry()
+    autotune.reset_sweep_stats()
+    CompiledCNN.load(tmp_path / "art")
+    st = autotune.sweep_stats()
+    assert st["conv_sweeps"] == 0 and st["gemm_sweeps"] == 0
+    assert st["conv_hits"] > 0 and st["gemm_hits"] > 0
+
+
+def test_artifact_roundtrip_int8_bit_exact(tmp_path):
+    cfg, params, x = _setup()
+    spec = ExecutionSpec(precision=Precision(quant="int8"),
+                         serving=Serving(batch=4))
+    c = compile_cnn(cfg, spec, (params, x))
+    c.save(tmp_path / "art")
+    c2 = CompiledCNN.load(tmp_path / "art")
+    assert c2.quant and c2.spec == c.spec
+    np.testing.assert_array_equal(np.asarray(c.forward(x)),
+                                  np.asarray(c2.forward(x)))
+
+
+def test_artifact_uncommitted_or_corrupt_raises(tmp_path):
+    from repro.ckpt.checkpoint import CheckpointError
+    cfg, params, _ = _setup()
+    c = compile_cnn(cfg, ExecutionSpec(serving=Serving(batch=4)), params)
+    p = tmp_path / "art"
+    c.save(p)
+    (p / "_COMMITTED").unlink()
+    with pytest.raises(CheckpointError, match="committed"):
+        CompiledCNN.load(p)
+    (p / "_COMMITTED").write_text("ok")
+    (p / "leaf_0.npy").write_bytes(b"\x93NUMPY truncated")
+    with pytest.raises(CheckpointError, match="leaf 0"):
+        CompiledCNN.load(p)
+
+
+# ---------------------------------------------------------------------------
 # interpret_mode (satellite: the scoped replacement for set_interpret)
 # ---------------------------------------------------------------------------
 
