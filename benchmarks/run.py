@@ -203,7 +203,15 @@ def fleet_bench(fast: bool) -> dict:
       same dp4 fleet with one deterministic replica failure mid-burst
       and a later recovery (modeled artifact-restore latency charged),
       retries re-dispatching the losses. Deterministic chaos, so the
-      throughput-under-failure cost is a gateable number.
+      throughput-under-failure cost is a gateable number;
+    * ``{arch}_fleet_gang_skew_model`` / ``{arch}_fleet_cb_model`` —
+      the scheduler rows (PR 7): the same dp2 fleet fed a skewed trace
+      (Poisson-ish arrivals at ~0.8x capacity, every 17th request a
+      4x-cost straggler) under gang rounds vs the continuous-batching
+      scheduler (per-slot retirement + work stealing);
+    * ``cb_vs_gang(alexnet)`` — the PR 7 acceptance row: under that
+      skewed trace, continuous batching must beat the gang scheduler's
+      p95 latency (enforced by main()).
     """
     import dataclasses as _dc
 
@@ -278,6 +286,45 @@ def fleet_bench(fast: bool) -> dict:
             / fleet["single"].throughput,
             "ge_3x_dp4": fleet["dp4"].throughput
             >= 3.0 * fleet["single"].throughput,
+            "batch": BATCH, "n_requests": N_REQ}
+
+        # scheduler rows (PR 7): a skewed trace — arrivals at ~0.8x the
+        # dp2 modeled capacity, every 17th request a 4x-cost straggler —
+        # served by gang rounds vs the continuous-batching scheduler.
+        # Gang rounds stall whole super-batches behind each straggler;
+        # per-slot retirement + work stealing must not.
+        rng = np.random.default_rng(7)
+        rate = 0.8 * 2 * BATCH / t_round
+        t_arr = np.cumsum(rng.exponential(1.0 / rate, N_REQ))
+        skew = [Request(rid=i, image=np.zeros((1, 1, 1), np.float32),
+                        t_arrival=float(t_arr[i]),
+                        cost=4.0 if i % 17 == 16 else 1.0)
+                for i in range(N_REQ)]
+
+        def sched_sim(**kw):
+            eng = ServeEngine(cfg, [], batch=BATCH, replicas=2,
+                              clock="modeled", execute=False, retries=2,
+                              **kw)
+            done, rep = eng.serve(list(skew))
+            assert sorted(c.rid for c in done) == list(range(N_REQ))
+            return rep
+
+        grep = sched_sim()
+        crep2 = sched_sim(scheduler="continuous", steal_threshold=1)
+        for mode, rep in (("gang_skew", grep), ("cb", crep2)):
+            rows[f"{name}_fleet_{mode}_model"] = {
+                "us_per_call": 1e6 / rep.throughput,
+                "fleet": {"mode": rep.mode, "replicas": 2, "pp_stages": 1,
+                          "batch": BATCH, "scheduler": rep.scheduler,
+                          "throughput_img_s": rep.throughput,
+                          "p95_ms": rep.p95_ms,
+                          "n_steals": rep.n_steals}}
+        rows[f"cb_vs_gang({name})"] = {
+            "gang_p95_ms": grep.p95_ms, "cb_p95_ms": crep2.p95_ms,
+            "p95_speedup": grep.p95_ms / crep2.p95_ms,
+            "gang_img_s": grep.throughput, "cb_img_s": crep2.throughput,
+            "n_steals": crep2.n_steals,
+            "cb_beats_gang_p95": crep2.p95_ms < grep.p95_ms,
             "batch": BATCH, "n_requests": N_REQ}
     return rows
 
@@ -426,6 +473,14 @@ def main() -> None:
         f"single-replica throughput (acceptance: >= 3x)"
         for name, row in conv_rows.items()
         if name.startswith("fleet_vs_single(") and not row["ge_3x_dp4"]]
+    # and the scheduler acceptance (PR 7): under the skewed trace,
+    # continuous batching must beat the gang scheduler's p95 latency
+    violations += [
+        f"{name}: continuous batching p95 {row['cb_p95_ms']:.3f} ms did "
+        f"not beat gang p95 {row['gang_p95_ms']:.3f} ms on the skewed "
+        f"trace (acceptance: cb < gang)"
+        for name, row in conv_rows.items()
+        if name.startswith("cb_vs_gang(") and not row["cb_beats_gang_p95"]]
     # and the compile-once acceptance (PR 5): a warm recompile — and
     # therefore a compile seeded from a committed save_plan table —
     # must perform ZERO DSE sweeps

@@ -9,7 +9,10 @@ Three acts over the same 4-replica data-parallel fleet:
   2. fault injection — replica 0 dies mid-stream and recovers later
      (the modeled artifact-restore latency is charged on top); its lost
      round re-dispatches against a per-request retry budget, and the
-     fleet serves degraded gang rounds over the 3 survivors meanwhile;
+     fleet serves degraded gang rounds over the 3 survivors meanwhile —
+     then the SAME chaos replays under the continuous-batching
+     scheduler, where only the in-flight slots (not a whole gang round)
+     are lost and stealing rebalances the survivors' queues;
   3. rolling hot-swap — the fleet upgrades fp32 -> calibrated int8
      under load, replica by replica, without dropping a request.
 
@@ -75,6 +78,25 @@ print(f"chaos run ({faults!r}):\n    {rep.summary()}\n"
 # the resilience invariant: nothing is ever silently stranded
 assert sorted(c.rid for c in rep.completions) == list(range(len(requests)))
 print("    every admitted request terminated (ok or explicit failure)\n")
+
+# -- act 2b: the same chaos under the continuous-batching scheduler ---------
+spec_cb = ExecutionSpec(
+    placement=Placement(replicas=4),
+    serving=Serving(batch=8, clock="modeled", retries=2,
+                    scheduler="continuous", steal_threshold=1))
+# stragglers (every 4th request is 50x heavier) keep work in flight
+# when the fault lands; under gang rounds each would stall its whole
+# co-scheduled batch, here they only occupy their own slot
+rep_cb = compile_cnn(cfg, spec_cb, params).serve(
+    synthetic_requests(240, cfg.input_hw, cfg.input_ch, rate=2000.0,
+                       straggler_every=4, straggler_cost=50.0),
+    faults=FaultSchedule.at(0.03, 0.06, replica=0))
+assert sorted(c.rid for c in rep_cb.completions) == list(range(240))
+print(f"same chaos, continuous batching (straggler-heavy stream):\n"
+      f"    {rep_cb.summary()}\n"
+      f"    only in-flight slots were lost to the fault "
+      f"({rep_cb.n_retries} retried dispatches); stragglers never "
+      f"stalled a co-scheduled request\n")
 
 # -- act 3: rolling hot-swap fp32 -> int8 under load ------------------------
 calib = jax.random.normal(jax.random.key(1),

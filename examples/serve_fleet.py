@@ -8,9 +8,13 @@ through each ``CompiledCNN``:
   1. a single replica (the PR 2 baseline),
   2. 4 data-parallel replicas sharded over the mesh "data" axis,
   3. hybrid 2 replicas x 4 pipeline stages (DP x PP on the 2-D mesh),
+  4. the same 4 replicas under the CONTINUOUS-BATCHING scheduler
+     (per-request slots + work stealing instead of gang rounds),
 
-printing each fleet report. Forces 8 host devices itself, so it runs
-anywhere:  PYTHONPATH=src python examples/serve_fleet.py
+printing each fleet report and asserting that every mode — including
+the rescheduled one — classifies identically (scheduling never changes
+the math). Forces 8 host devices itself, so it runs anywhere:
+  PYTHONPATH=src python examples/serve_fleet.py
 """
 import os
 import sys
@@ -37,13 +41,19 @@ requests = synthetic_requests(n_req, cfg.input_hw, cfg.input_ch, rate=1e6)
 print(f"serving {n_req} requests (alexnet smoke, micro-batch {BATCH}) "
       f"on {jax.device_count()} host devices\n")
 preds = {}
-for label, placement in (
-        ("single replica", Placement()),
-        ("4 DP replicas over mesh 'data'", Placement(replicas=4)),
+for label, placement, serving in (
+        ("single replica", Placement(),
+         Serving(batch=BATCH, clock="modeled")),
+        ("4 DP replicas over mesh 'data'", Placement(replicas=4),
+         Serving(batch=BATCH, clock="modeled")),
         ("hybrid 2 replicas x 4 pipeline stages",
-         Placement(replicas=2, pp_stages=4))):
-    spec = ExecutionSpec(placement=placement,
-                         serving=Serving(batch=BATCH, clock="modeled"))
+         Placement(replicas=2, pp_stages=4),
+         Serving(batch=BATCH, clock="modeled")),
+        ("4 replicas, continuous batching + stealing",
+         Placement(replicas=4),
+         Serving(batch=BATCH, clock="modeled", scheduler="continuous",
+                 steal_threshold=1, retries=1))):
+    spec = ExecutionSpec(placement=placement, serving=serving)
     compiled = compile_cnn(cfg, spec, params)
     rep = compiled.serve(requests)
     assert len(rep.completions) == n_req

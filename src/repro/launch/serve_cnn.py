@@ -18,6 +18,17 @@ map to two flags:
     pipeline stages streamed GPipe-style over the mesh "pipe" axis;
   * both > 1         — hybrid DP x PP on the 2-D mesh.
 
+PR 7 adds the scheduling axis: ``--scheduler continuous`` (with
+``--clock modeled``) swaps gang rounds for per-request batch slots
+admitted/retired at microbatch boundaries (``repro.serve.scheduler``),
+``--steal-threshold`` turns on cross-replica work stealing, and
+``--autoscale`` (with the ``--min-replicas``/``--max-replicas``/
+``--scale-interval``/``--scale-cooldown``/``--util-high``/``--util-low``
+knobs) lets the fleet elastically scale against p95-vs-SLO and
+utilization signals. ``--straggler-every``/``--straggler-cost`` salt
+the synthetic trace with heavy requests — the pathology that separates
+the two schedulers.
+
 Multi-device runs on CPU need forced host devices, e.g.::
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -45,14 +56,24 @@ from repro.serve import (Completion, FaultSchedule,  # noqa: F401
 
 
 def synthetic_requests(n: int, hw: int, ch: int, rate: float,
-                       seed: int = 0) -> List[Request]:
-    """n requests with exponential inter-arrival times (mean 1/rate s)."""
+                       seed: int = 0, straggler_every: int = 0,
+                       straggler_cost: float = 4.0) -> List[Request]:
+    """n requests with exponential inter-arrival times (mean 1/rate s).
+
+    ``straggler_every`` > 0 marks every k-th request as a straggler
+    with relative service weight ``straggler_cost`` (the modeled clock
+    charges it that multiple of a round) — under gang scheduling it
+    stalls its whole co-scheduled round, under continuous batching only
+    its own slot.
+    """
     rng = np.random.default_rng(seed)
     t = 0.0
     out = []
     for i in range(n):
         t += rng.exponential(1.0 / rate)
-        out.append(Request(rid=i, t_arrival=t,
+        cost = (straggler_cost
+                if straggler_every and i % straggler_every == 0 else 1.0)
+        out.append(Request(rid=i, t_arrival=t, cost=cost,
                            image=rng.standard_normal(
                                (hw, hw, ch)).astype(np.float32)))
     return out
@@ -161,7 +182,41 @@ def main() -> None:
                          "retried request re-enters admission")
     ap.add_argument("--slo", type=float, default=0.0,
                     help="per-request latency bound (s); the report "
-                         "counts violations (0 = off)")
+                         "counts violations (0 = off) and the "
+                         "autoscaler scales on windowed p95 vs it")
+    # -- continuous batching / elastic fleet flags -------------------------
+    ap.add_argument("--scheduler", choices=("gang", "continuous"),
+                    default="gang",
+                    help="unit of scheduling: padded gang rounds, or "
+                         "per-request slots admitted/retired at "
+                         "microbatch boundaries (needs --clock modeled)")
+    ap.add_argument("--steal-threshold", type=int, default=0,
+                    help="continuous only: steal one queued request per "
+                         "boundary when queue-depth skew exceeds this "
+                         "(each steal charges the retry budget; 0 = off)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="continuous only: elastically scale replicas "
+                         "between --min/--max-replicas on p95-vs-SLO "
+                         "and utilization signals")
+    ap.add_argument("--min-replicas", type=int, default=0,
+                    help="autoscale floor (default: initial --replicas)")
+    ap.add_argument("--max-replicas", type=int, default=0,
+                    help="autoscale ceiling (default: 2x --replicas)")
+    ap.add_argument("--scale-interval", type=float, default=0.05,
+                    help="seconds between autoscale policy evaluations")
+    ap.add_argument("--scale-cooldown", type=float, default=0.0,
+                    help="minimum seconds between scaling decisions")
+    ap.add_argument("--util-high", type=float, default=0.85,
+                    help="scale up when fleet load (slots+backlog over "
+                         "capacity) exceeds this")
+    ap.add_argument("--util-low", type=float, default=0.30,
+                    help="scale down (graceful drain) when fleet load "
+                         "falls below this")
+    ap.add_argument("--straggler-every", type=int, default=0,
+                    help="mark every k-th synthetic request a straggler "
+                         "(0 = none)")
+    ap.add_argument("--straggler-cost", type=float, default=4.0,
+                    help="relative service weight of a straggler request")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -180,6 +235,14 @@ def main() -> None:
     # five frames into pallas tracing. The cfg's own dtype/tiling knobs
     # are lifted intact (the spec is authoritative, so defaulting them
     # would silently overwrite a customized config)
+    autoscale = None
+    if args.autoscale:
+        from repro.pipeline import AutoscalePolicy
+        autoscale = AutoscalePolicy(
+            min_replicas=args.min_replicas or replicas,
+            max_replicas=args.max_replicas or 2 * replicas,
+            interval=args.scale_interval, cooldown=args.scale_cooldown,
+            util_high=args.util_high, util_low=args.util_low)
     spec = ExecutionSpec(
         precision=Precision(dtype=cfg.dtype, quant=args.quant,
                             calib=args.calib),
@@ -190,7 +253,10 @@ def main() -> None:
                             microbatches=args.microbatches),
         serving=Serving(batch=args.batch, clock=args.clock,
                         max_queue=args.max_queue, retries=args.retries,
-                        backoff=args.backoff, slo=args.slo),
+                        backoff=args.backoff, slo=args.slo,
+                        scheduler=args.scheduler,
+                        steal_threshold=args.steal_threshold,
+                        autoscale=autoscale),
         use_pallas=use_pallas)
     faults = None
     if args.mtbf and args.fail_at is not None:
@@ -206,7 +272,9 @@ def main() -> None:
                                     seed=args.seed)
     compiled = compile_cnn(cfg, spec)
     requests = synthetic_requests(n_req, cfg.input_hw, cfg.input_ch,
-                                  args.rate)
+                                  args.rate,
+                                  straggler_every=args.straggler_every,
+                                  straggler_cost=args.straggler_cost)
 
     if args.quant == "int8":
         qp = compiled.params        # calibrated during the compile phase
@@ -233,6 +301,20 @@ def main() -> None:
     # completion (ok or explicitly failed) or one admission rejection
     assert len(rep.completions) + rep.n_rejected == n_req, \
         (len(rep.completions), n_req)
+    if args.scheduler == "continuous":
+        # scale/steal accounting must be self-consistent: one recorded
+        # event per decision, and the final fleet size follows from them
+        ups = sum(1 for e in rep.scale_events if e["kind"] == "up")
+        downs = sum(1 for e in rep.scale_events if e["kind"] == "down")
+        assert (ups, downs) == (rep.n_scale_up, rep.n_scale_down), \
+            (ups, downs, rep.n_scale_up, rep.n_scale_down)
+        assert rep.replicas_final == replicas + ups - downs, \
+            (rep.replicas_final, replicas, ups, downs)
+        print(f"[serve_cnn] continuous: {rep.n_steals} steals, "
+              f"{rep.n_scale_up} scale-ups, {rep.n_scale_down} "
+              f"scale-downs, {rep.replicas_final} final replicas, "
+              f"mean occupancy "
+              + "/".join(f"{o:.0%}" for o in rep.occupancy))
     gops = flops_per_image(compiled.cfg) * rep.throughput / 1e9
 
     print(f"[serve_cnn] {args.arch}{' (smoke)' if args.smoke else ''}: "

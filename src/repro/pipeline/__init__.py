@@ -14,9 +14,11 @@ from repro.pipeline.plan_table import PlanTable, load_plan
 from repro.pipeline.spec import (ExecutionSpec, Placement, Precision,
                                  Serving, Tiling, resolve_config,
                                  spec_from_config)
+from repro.serve.scheduler import AutoscalePolicy
 
 __all__ = [
-    "CompiledCNN", "ExecutionSpec", "Placement", "PlanTable", "Precision",
-    "Serving", "Tiling", "compile_cnn", "load_artifact", "load_plan",
-    "resolve_config", "save_artifact", "spec_from_config",
+    "AutoscalePolicy", "CompiledCNN", "ExecutionSpec", "Placement",
+    "PlanTable", "Precision", "Serving", "Tiling", "compile_cnn",
+    "load_artifact", "load_plan", "resolve_config", "save_artifact",
+    "spec_from_config",
 ]

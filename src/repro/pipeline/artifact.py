@@ -83,10 +83,15 @@ def spec_to_dict(spec: ExecutionSpec) -> dict:
 
 
 def spec_from_dict(d: dict) -> ExecutionSpec:
+    serving = dict(d["serving"])
+    # asdict deep-converts the nested autoscale policy; rebuild it
+    if serving.get("autoscale") is not None:
+        from repro.serve.scheduler import AutoscalePolicy
+        serving["autoscale"] = AutoscalePolicy(**serving["autoscale"])
     return ExecutionSpec(precision=Precision(**d["precision"]),
                          tiling=Tiling(**d["tiling"]),
                          placement=Placement(**d["placement"]),
-                         serving=Serving(**d["serving"]),
+                         serving=Serving(**serving),
                          use_pallas=d["use_pallas"],
                          interpret=d["interpret"])
 

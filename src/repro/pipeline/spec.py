@@ -30,6 +30,7 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core.config import CNNConfig
+from repro.serve.scheduler import AutoscalePolicy
 
 
 @dataclass(frozen=True)
@@ -77,6 +78,16 @@ class Serving:
     budget it ends as an explicit ``Completion(status="failed")``.
     ``slo`` is a per-request latency bound the report counts violations
     of (0 = no SLO).
+
+    ``scheduler`` selects the unit of scheduling: ``"gang"`` (padded
+    super-batch rounds, the default) or ``"continuous"`` (per-request
+    slots admitted/retired at microbatch boundaries — requires the
+    modeled clock, see ``repro.serve.scheduler``). ``steal_threshold``
+    and ``autoscale`` only exist under the continuous scheduler: queue
+    skew deeper than the threshold triggers work stealing (each steal
+    charges the request's retry budget, so it needs ``retries >= 1``),
+    and an :class:`~repro.serve.scheduler.AutoscalePolicy` lets the
+    fleet elastically scale between its min/max replicas.
     """
     batch: int = 8                     # micro-batch queues pad requests to
     max_queue: int = 0                 # admission bound (0 = unbounded)
@@ -85,6 +96,9 @@ class Serving:
     retries: int = 0                   # re-dispatch budget per request
     backoff: float = 0.0               # base re-admission delay (seconds)
     slo: float = 0.0                   # latency bound (seconds, 0 = off)
+    scheduler: str = "gang"            # "gang" | "continuous"
+    steal_threshold: int = 0           # queue-skew steal trigger (0 = off)
+    autoscale: Optional[AutoscalePolicy] = None   # elastic fleet policy
 
 
 @dataclass(frozen=True)
@@ -149,6 +163,31 @@ class ExecutionSpec:
             raise ValueError(
                 "Serving.backoff set with retries=0 is contradictory: "
                 "backoff only delays re-admission of retried requests")
+        if s.scheduler not in ("gang", "continuous"):
+            raise ValueError(f"Serving.scheduler={s.scheduler!r}: gang "
+                             "or continuous")
+        if s.scheduler == "continuous" and s.clock != "modeled":
+            raise ValueError(
+                "Serving.scheduler='continuous' requires "
+                "clock='modeled': slot service and microbatch-boundary "
+                "times come from the roofline model, not wall time")
+        if s.steal_threshold < 0:
+            raise ValueError(
+                f"Serving.steal_threshold={s.steal_threshold}: 0 "
+                "(stealing off) or a positive queue-skew depth")
+        if (s.steal_threshold or s.autoscale is not None) and \
+                s.scheduler != "continuous":
+            raise ValueError(
+                "Serving.steal_threshold / autoscale only exist under "
+                "scheduler='continuous': gang rounds have no "
+                "per-request slots to steal or scale")
+        if s.autoscale is not None and not (
+                s.autoscale.min_replicas <= pl.replicas
+                <= s.autoscale.max_replicas):
+            raise ValueError(
+                f"Placement.replicas={pl.replicas} outside the "
+                f"autoscale range [{s.autoscale.min_replicas}, "
+                f"{s.autoscale.max_replicas}]")
         if t.b_blk > 1 and s.batch % t.b_blk:
             raise ValueError(
                 f"Serving.batch={s.batch} is not a multiple of "

@@ -10,6 +10,8 @@ from repro.serve.engine import (ServeEngine, pipeline_logits,
 from repro.serve.faults import FaultEvent, FaultSchedule
 from repro.serve.report import FleetReport, fleet_report, latency_report
 from repro.serve.router import Completion, MicroBatcher, Request, Router
+from repro.serve.scheduler import (AutoscalePolicy, ContinuousScheduler,
+                                   ScaleEvent)
 from repro.serve.stage_planner import (StagePlan, group_cost,
                                        group_io_shapes, plan_stages,
                                        total_cost)
@@ -18,6 +20,7 @@ __all__ = [
     "ServeEngine", "pipeline_logits", "restore_latency_model",
     "FaultEvent", "FaultSchedule", "FleetReport", "fleet_report",
     "latency_report", "Completion", "MicroBatcher", "Request", "Router",
+    "AutoscalePolicy", "ContinuousScheduler", "ScaleEvent",
     "StagePlan", "group_cost", "group_io_shapes", "plan_stages",
     "total_cost",
 ]

@@ -51,6 +51,13 @@ latency of reloading the committed ``CompiledCNN`` artifact.
 executes: replicas drain and swap one at a time, evacuated requests
 re-dispatch for free (a graceful drain loses no work), and each
 completion records which version served it.
+
+Gang rounds are the default; ``scheduler="continuous"`` (with the
+modeled clock) swaps the whole loop for the per-request slot scheduler
+in ``repro.serve.scheduler``: requests admit and retire individually at
+microbatch boundaries, queues work-steal past ``steal_threshold``, and
+an ``autoscale`` policy grows/shrinks the fleet against p95-vs-SLO and
+utilization signals. See that module's docstring for the semantics.
 """
 from __future__ import annotations
 
@@ -175,14 +182,46 @@ class ServeEngine:
                  n_microbatches: int = 0, use_pallas: bool = True,
                  clock: str = "measured", max_queue: int = 0,
                  execute: bool = True, retries: int = 0,
-                 backoff: float = 0.0, slo: float = 0.0):
+                 backoff: float = 0.0, slo: float = 0.0,
+                 scheduler: str = "gang", steal_threshold: int = 0,
+                 autoscale=None):
         from repro.quant.calibrate import QuantizedCNNParams
+        from repro.serve.scheduler import AutoscalePolicy
         if clock not in ("measured", "modeled"):
             raise ValueError(f"unknown clock {clock!r}")
         if retries < 0:
             raise ValueError(f"retries={retries} must be >= 0")
         if backoff < 0 or slo < 0:
             raise ValueError("backoff/slo are seconds >= 0")
+        if scheduler not in ("gang", "continuous"):
+            raise ValueError(f"unknown scheduler {scheduler!r}: "
+                             "gang or continuous")
+        if scheduler == "continuous" and clock != "modeled":
+            raise ValueError(
+                "scheduler='continuous' needs clock='modeled': slot "
+                "service and microbatch-boundary times come from the "
+                "roofline model, not wall time")
+        if steal_threshold < 0:
+            raise ValueError(
+                f"steal_threshold={steal_threshold} must be >= 0 "
+                "(0 = stealing off)")
+        if isinstance(autoscale, dict):
+            autoscale = AutoscalePolicy(**autoscale)
+        if (steal_threshold or autoscale is not None) and \
+                scheduler != "continuous":
+            raise ValueError(
+                "steal_threshold / autoscale only exist under "
+                "scheduler='continuous': gang rounds have no per-request "
+                "slots to steal or scale")
+        if autoscale is not None and not (
+                autoscale.min_replicas <= replicas
+                <= autoscale.max_replicas):
+            raise ValueError(
+                f"replicas={replicas} outside the autoscale range "
+                f"[{autoscale.min_replicas}, {autoscale.max_replicas}]")
+        self.scheduler = scheduler
+        self.steal_threshold = int(steal_threshold)
+        self.autoscale = autoscale
         self.cfg = cfg
         self.params = params
         self.quant = isinstance(params, QuantizedCNNParams)
@@ -236,7 +275,11 @@ class ServeEngine:
             # one replica's micro-batch; dp replicas run concurrently
             self.t_round_model = total_cost(cfg, batch, dtype=self.dtype)
         self.mb = batch // self.n_micro
-        self.router = Router(R, batch, max_queue=max_queue)
+        # the elastic fleet pre-builds queues up to max_replicas; the
+        # scheduler's active mask decides which ones receive dispatch
+        n_queues = (autoscale.max_replicas if autoscale is not None
+                    else R)
+        self.router = Router(n_queues, batch, max_queue=max_queue)
         self.mesh = None
         # -- version bookkeeping (hot_swap installs version 1, 2, ...) -----
         self.t_restore_model = restore_latency_model(params_nbytes(params))
@@ -249,7 +292,8 @@ class ServeEngine:
         self._pending_swap = None
         self._round_fns = {}
         self._round_fn = None
-        if execute:
+        self._slot_fns = {}
+        if execute and self.scheduler == "gang":
             if R * S > 1:
                 if jax.device_count() < R * S:
                     raise RuntimeError(
@@ -259,6 +303,9 @@ class ServeEngine:
                 from repro.launch.mesh import compat_make_mesh
                 self.mesh = compat_make_mesh((R, S), ("data", "pipe"))
             self._round_fn = self._round_fns[0] = self._build_round_fn()
+        # continuous scheduling needs no mesh: admissions execute as
+        # per-replica padded forwards (see _slot_fn), so the fleet can
+        # elastically scale past the device count
 
     @classmethod
     def from_spec(cls, cfg: CNNConfig, params, spec) -> "ServeEngine":
@@ -275,7 +322,11 @@ class ServeEngine:
                    execute=spec.serving.execute,
                    retries=getattr(spec.serving, "retries", 0),
                    backoff=getattr(spec.serving, "backoff", 0.0),
-                   slo=getattr(spec.serving, "slo", 0.0))
+                   slo=getattr(spec.serving, "slo", 0.0),
+                   scheduler=getattr(spec.serving, "scheduler", "gang"),
+                   steal_threshold=getattr(spec.serving,
+                                           "steal_threshold", 0),
+                   autoscale=getattr(spec.serving, "autoscale", None))
 
     # -- forward builders --------------------------------------------------
 
@@ -316,6 +367,24 @@ class ServeEngine:
                 quant=quant, dp_axis="data")
             return jnp.argmax(logits, -1)
         return jax.jit(pp_fn)
+
+    def _slot_fn(self, v: int):
+        """Padded single-replica forward ``imgs (batch, ...) -> preds``
+        for params version ``v`` — the continuous scheduler's execution
+        unit. No mesh: one admission group runs the full (batched/int8)
+        pipeline on the default device, row-independent, so predictions
+        match ``cnn_forward`` exactly while replica count floats free
+        of the device count."""
+        if v not in self._slot_fns:
+            rec = self._versions[v]
+            params, cfg = rec["params"], rec["cfg"]
+
+            def fn(imgs, params=params, cfg=cfg):
+                logits = cnn_forward(params, imgs, cfg,
+                                     use_pallas=self.use_pallas)
+                return jnp.argmax(logits, -1)
+            self._slot_fns[v] = jax.jit(fn)
+        return self._slot_fns[v]
 
     def _version_fn(self, v: int):
         if v not in self._round_fns:
@@ -442,7 +511,17 @@ class ServeEngine:
         rolls through the same loop. Invariant: every admitted request
         ends as exactly one Completion or one admission rejection —
         never stranded, even if the whole fleet dies.
+
+        With ``scheduler="continuous"`` the whole call is delegated to
+        :class:`repro.serve.scheduler.ContinuousScheduler` — same
+        contract, but requests are admitted/retired individually at
+        microbatch boundaries, work-stolen across queues, and the
+        fleet elastically scales when ``autoscale`` is set.
         """
+        if self.scheduler == "continuous":
+            from repro.serve.scheduler import ContinuousScheduler
+            return ContinuousScheduler(self).serve(requests,
+                                                   faults=faults)
         R = self.replicas
         if faults is not None:
             faults.validate_for(R)
@@ -631,7 +710,14 @@ class ServeEngine:
             else:
                 preds_by_v = {v: np.full((R, self.batch), -1)
                               for v in need}
+            # a gang round is as slow as its slowest co-scheduled
+            # request: a cost>1 straggler multiplies the whole round
+            # (all-default costs leave modeled rows unchanged)
+            cost_mult = max([1.0] + [req.cost
+                                     for _, take, _, _ in round_items
+                                     for req in take])
             t_service = (max(self._versions[v]["t_round"] for v in need)
+                         * cost_mult
                          if self.clock_mode == "modeled" else t_wall)
             t_end = clock + t_service
             rounds += 1

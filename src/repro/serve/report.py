@@ -64,19 +64,29 @@ def latency_report(done: List) -> dict:
 class FleetReport:
     """Fleet-level serving summary (one engine run)."""
     mode: str                          # "single" | "dp" | "pp" | "hybrid"
-    replicas: int
+    replicas: int                      # replicas the run STARTED with
     pp_stages: int
-    batch: int                         # per-replica micro-batch
+    batch: int                         # per-replica micro-batch (slot count)
     clock: str                         # "measured" | "modeled"
+    scheduler: str = "gang"            # "gang" | "continuous"
     n_done: int = 0
     n_rejected: int = 0                # admission-control rejections
-    rounds: int = 0                    # gang-scheduled service rounds
+    rounds: int = 0                    # gang rounds / microbatch boundaries
     throughput: float = 0.0            # img/s, aggregate over the fleet
     p50_ms: float = float("nan")
     p95_ms: float = float("nan")
     makespan_s: float = 0.0
     utilization: List[float] = field(default_factory=list)  # per replica
     bubble_fraction: float = 0.0       # GPipe fill/drain share (pp modes)
+    # -- continuous-batching accounting (the slot scheduler) ---------------
+    occupancy: List[float] = field(default_factory=list)  # mean filled
+    #                                    slots / batch per replica
+    n_steals: int = 0                  # requests work-stolen across queues
+    n_scale_up: int = 0                # replicas the autoscaler spun up
+    n_scale_down: int = 0              # replicas it gracefully drained out
+    scale_events: List = field(default_factory=list)  # dicts: t/kind/
+    #                                    replica/reason, in decision order
+    replicas_final: int = 0            # active replicas when the run ended
     # -- fault / recovery accounting (the resilience layer) ---------------
     n_failed: int = 0                  # retry budget exhausted -> "failed"
     n_retries: int = 0                 # re-dispatches charged to budgets
@@ -123,10 +133,20 @@ class FleetReport:
                 if self.n_swapped else "")
         slo = (f", SLO({self.slo_s * 1e3:.0f} ms) violations "
                f"{self.slo_violations}" if self.slo_s else "")
-        return (f"[{self.mode}] {self.n_done} served in {self.rounds} "
-                f"rounds ({self.clock} clock): {self.throughput:.1f} img/s, "
+        cb = ""
+        if self.scheduler == "continuous":
+            occ = (", occ " + "/".join(f"{o:.0%}" for o in self.occupancy)
+                   if self.occupancy else "")
+            scale = (f", scale +{self.n_scale_up}/-{self.n_scale_down} "
+                     f"-> {self.replicas_final} replicas"
+                     if (self.n_scale_up or self.n_scale_down) else "")
+            cb = f" | cb: {self.n_steals} steals{occ}{scale}"
+        unit = "rounds" if self.scheduler == "gang" else "boundaries"
+        return (f"[{self.mode}/{self.scheduler}] {self.n_done} served in "
+                f"{self.rounds} {unit} ({self.clock} clock): "
+                f"{self.throughput:.1f} img/s, "
                 f"p50 {self.p50_ms:.1f} ms, p95 {self.p95_ms:.1f} ms"
-                f"{util}{rej}{bub}{slo}{chaos}{swap}")
+                f"{util}{rej}{bub}{slo}{cb}{chaos}{swap}")
 
 
 def fleet_report(done: List, rejected: List, *, mode: str, replicas: int,
@@ -136,7 +156,12 @@ def fleet_report(done: List, rejected: List, *, mode: str, replicas: int,
                  n_failures: int = 0, n_recoveries: int = 0,
                  degraded_rounds: int = 0,
                  time_to_recover_s: Sequence[float] = (),
-                 n_swapped: int = 0, slo_s: float = 0.0) -> FleetReport:
+                 n_swapped: int = 0, slo_s: float = 0.0,
+                 scheduler: str = "gang",
+                 occupancy: Sequence[float] = (), n_steals: int = 0,
+                 n_scale_up: int = 0, n_scale_down: int = 0,
+                 scale_events: Sequence[dict] = (),
+                 replicas_final: int = 0) -> FleetReport:
     """Assemble the fleet report from an engine run's accounting."""
     lat = latency_report(done)
     failed = [c for c in done if getattr(c, "status", "ok") == "failed"]
@@ -145,7 +170,8 @@ def fleet_report(done: List, rejected: List, *, mode: str, replicas: int,
                           and c.latency > slo_s) if slo_s > 0 else 0)
     return FleetReport(
         mode=mode, replicas=replicas, pp_stages=pp_stages, batch=batch,
-        clock=clock, n_done=lat["n"], n_rejected=len(rejected),
+        clock=clock, scheduler=scheduler, n_done=lat["n"],
+        n_rejected=len(rejected),
         rounds=rounds, throughput=(lat["n"] / makespan_s
                                    if makespan_s > 0 else 0.0),
         p50_ms=lat["p50_ms"], p95_ms=lat["p95_ms"], makespan_s=makespan_s,
@@ -155,4 +181,8 @@ def fleet_report(done: List, rejected: List, *, mode: str, replicas: int,
         n_retries=n_retries, n_failures=n_failures,
         n_recoveries=n_recoveries, degraded_rounds=degraded_rounds,
         time_to_recover_s=list(time_to_recover_s), n_swapped=n_swapped,
-        slo_s=slo_s, slo_violations=slo_violations)
+        slo_s=slo_s, slo_violations=slo_violations,
+        occupancy=list(occupancy), n_steals=n_steals,
+        n_scale_up=n_scale_up, n_scale_down=n_scale_down,
+        scale_events=list(scale_events),
+        replicas_final=replicas_final or replicas)

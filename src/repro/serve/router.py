@@ -29,10 +29,19 @@ import numpy as np
 
 @dataclass
 class Request:
-    """One inference request: an image plus its (simulated) arrival time."""
+    """One inference request: an image plus its (simulated) arrival time.
+
+    ``cost`` is the request's relative service weight (1.0 = nominal).
+    The modeled clock charges a request ``cost * t_round`` of pipeline
+    traversal; under gang scheduling a ``cost > 1`` straggler stalls its
+    whole round (every co-scheduled request waits), which is exactly the
+    pathology the continuous-batching scheduler exists to remove — there
+    a straggler only holds its own slot.
+    """
     rid: int
     image: np.ndarray
     t_arrival: float
+    cost: float = 1.0                  # relative service weight (straggler)
 
 
 @dataclass
@@ -99,6 +108,19 @@ class MicroBatcher:
         take, self._q = self._q, []
         return take
 
+    def pop(self, k: int) -> List[Request]:
+        """Pop up to ``k`` requests unpadded (FIFO) — the continuous
+        scheduler's slot-fill path: free batch slots admit from the head
+        of the queue at a microbatch boundary, no round padding."""
+        take, self._q = self._q[:k], self._q[k:]
+        return take
+
+    def steal_tail(self) -> Optional[Request]:
+        """Pop the NEWEST queued request (or None) — the work-stealing
+        victim: the request that would otherwise wait behind this whole
+        backlog, i.e. the one whose latency a steal improves most."""
+        return self._q.pop() if self._q else None
+
 
 class Router:
     """Least-loaded dispatch over N replica queues with admission control.
@@ -144,9 +166,20 @@ class Router:
         return True
 
     def evacuate(self, r: int) -> List[Request]:
-        """Pop every request queued on replica ``r`` (failure/swap
+        """Pop every request queued on replica ``r`` (failure/swap/drain
         evacuation); the caller re-dispatches them."""
         return self.queues[r].drain_all()
+
+    def depths(self) -> List[int]:
+        """Per-replica queue depth — the skew signal the continuous
+        scheduler's work stealing triggers on."""
+        return [len(q) for q in self.queues]
+
+    def steal(self, donor: int) -> Optional[Request]:
+        """Steal one request from the tail of ``donor``'s queue (None if
+        it is empty). The caller re-queues it on the thief — and charges
+        the request's retry budget, exactly like a failure evacuation."""
+        return self.queues[donor].steal_tail()
 
     def drain_round(self, alive: Optional[Sequence[bool]] = None):
         """Pop one (padded) micro-batch per replica — a gang round.

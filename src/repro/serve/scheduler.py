@@ -1,0 +1,625 @@
+"""Continuous-batching scheduler + SLO-aware elastic scaling.
+
+The gang-scheduled engine (``repro.serve.engine``) violates PipeCNN's
+own principle at fleet scope: the paper's kernel cascade never stalls
+waiting on a gang of work, but a gang round does exactly that — a whole
+padded super-batch enters and exits together, so one straggler stalls
+every co-scheduled request and queue skew between replicas goes
+unserved. This module changes the unit of scheduling from *round* to
+*request*, following the per-request slot discipline of
+maxtext/JetStream's prefill/insert/generate design:
+
+  * each replica exposes ``batch`` **slots**; a free slot is filled
+    from the head of the replica's queue at the next **microbatch
+    boundary** (``t_round / batch`` apart for dp replicas,
+    ``t_round / n_micro`` for pipeline stages) instead of waiting for a
+    round to drain;
+  * a slot holds one request for ``cost * t_round`` of modeled pipeline
+    traversal and **retires individually** at the first boundary past
+    its completion — a ``cost > 1`` straggler only occupies its own
+    slot;
+  * when queue depth skews past ``steal_threshold``, an under-loaded
+    replica **steals** the tail request of the deepest queue at its
+    boundary (one steal per boundary). A steal charges the request's
+    retry budget exactly like a PR 6 failure evacuation — so with
+    ``retries=0`` stealing is off by construction — but a request whose
+    budget is exhausted is never stolen (a steal must not fail it).
+
+:class:`AutoscalePolicy` layers elastic scaling on the same modeled
+discrete-event clock: every ``interval`` seconds the scheduler compares
+the windowed p95 against the SLO and fleet load (filled slots + backlog
+over serving capacity) against ``util_high`` / ``util_low``, then
+spins a replica **up** — charged the artifact-restore latency of
+``restore_latency_model`` before it serves — or **down** via a graceful
+drain (the ``hot_swap`` drain primitive: queue evacuated free of retry
+charge, in-flight slots finish, then the replica leaves dispatch).
+
+Faults and rolling hot-swaps ride the same loop with PR 6 semantics: a
+failing replica loses its in-flight slots (readmitted against the
+retry budget), every admitted request ends as exactly one Completion
+or rejection — never stranded — and the modeled clock keeps runs
+deterministic and device-free under ``execute=False``. With
+``execute=True`` each admission group runs a padded single-replica
+forward (no mesh needed), so predictions stay fp32-allclose /
+int8-bit-exact with ``cnn_forward`` while the fleet scales past the
+device count.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import deque
+from dataclasses import asdict, dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.report import FleetReport, fleet_report, nearest_rank
+from repro.serve.router import Completion, Request
+
+
+@dataclass(frozen=True)
+class AutoscalePolicy:
+    """When and how far the fleet elastically scales.
+
+    The scheduler evaluates the policy every ``interval`` modeled
+    seconds: scale up one replica when windowed p95 exceeds the
+    engine's SLO or load exceeds ``util_high``; scale down one replica
+    (graceful drain) when load falls below ``util_low``. ``cooldown``
+    seconds must pass between decisions; ``window`` is how many recent
+    completions feed the p95 signal. Load is (filled slots + queued
+    requests) / (serving replicas * batch), so it exceeds 1.0 under
+    backlog — that is the burst signal.
+    """
+    min_replicas: int = 1              # never drain below this
+    max_replicas: int = 8              # never spin up beyond this
+    interval: float = 0.05             # seconds between policy evals
+    cooldown: float = 0.0              # min seconds between decisions
+    util_high: float = 0.85            # scale up above this load
+    util_low: float = 0.30             # scale down below this load
+    window: int = 32                   # completions in the p95 window
+
+    def __post_init__(self):
+        if not (1 <= self.min_replicas <= self.max_replicas):
+            raise ValueError(
+                f"AutoscalePolicy needs 1 <= min_replicas "
+                f"({self.min_replicas}) <= max_replicas "
+                f"({self.max_replicas})")
+        if self.interval <= 0:
+            raise ValueError(f"AutoscalePolicy.interval={self.interval}: "
+                             "must be > 0 seconds")
+        if self.cooldown < 0:
+            raise ValueError(f"AutoscalePolicy.cooldown={self.cooldown}: "
+                             "must be >= 0 seconds")
+        if not (0 < self.util_low < self.util_high):
+            raise ValueError(
+                f"AutoscalePolicy needs 0 < util_low ({self.util_low}) "
+                f"< util_high ({self.util_high})")
+        if self.window < 1:
+            raise ValueError(f"AutoscalePolicy.window={self.window}: "
+                             "must be >= 1")
+
+
+@dataclass(frozen=True)
+class ScaleEvent:
+    """One autoscaling decision (reports carry these as dicts)."""
+    t: float                           # modeled time of the decision
+    kind: str                          # "up" | "down"
+    replica: int                       # which replica slot it targets
+    reason: str                        # the signal that triggered it
+
+
+@dataclass
+class _Slot:
+    """One in-flight request: admitted at a boundary, retires at the
+    first boundary past ``t_ready = t_admit + cost * t_round``."""
+    t_ready: float
+    req: Request
+    pred: int
+    version: int
+
+
+class ContinuousScheduler:
+    """Drives a :class:`ServeEngine` with per-request slot scheduling.
+
+    Built by ``ServeEngine.serve`` when the engine was constructed with
+    ``scheduler="continuous"`` — not normally instantiated directly.
+    Requires the modeled clock (service and boundary times come from
+    the roofline model, so runs are deterministic).
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    # The serve loop is one long discrete-event simulation; splitting it
+    # would scatter the closures over (clock, slots, events) state.
+    def serve(self, requests: List[Request], *,
+              faults=None) -> Tuple[List[Completion], FleetReport]:
+        """Drain a request stream; returns (completions, fleet report).
+
+        Same contract as the gang engine's ``serve`` — every admitted
+        request ends as exactly one Completion or one admission
+        rejection, faults/hot-swaps honored — but requests are admitted
+        and retired individually at microbatch boundaries, work-stolen
+        across queues, and the fleet elastically scales when the engine
+        carries an :class:`AutoscalePolicy`.
+        """
+        eng = self.engine
+        R0 = eng.replicas
+        B = eng.batch
+        policy = eng.autoscale
+        router = eng.router
+        nq = router.n_replicas         # max_replicas queues when elastic
+        if faults is not None:
+            faults.validate_for(R0)
+
+        done: List[Completion] = []
+        pending = sorted(requests, key=lambda r: r.t_arrival)
+        clock = 0.0
+        boundaries = 0
+        seq = itertools.count()
+
+        # -- per-replica state ------------------------------------------
+        active = [r < R0 for r in range(nq)]    # part of the fleet
+        up = [r < R0 for r in range(nq)]        # alive and serving-capable
+        draining = [False] * nq                 # no new admissions
+        drain_kind: List[Optional[str]] = [None] * nq   # "swap" | "scale"
+        version = [eng._cur_version] * nq
+        gen = [0] * nq                 # invalidates stale boundary events
+        armed = [False] * nq           # a live boundary event exists
+        no_steal_until = [0.0] * nq    # backoff after a refused steal
+        slots: List[List[_Slot]] = [[] for _ in range(nq)]
+        starting: set = set()          # scale-ups paying their restore
+
+        attempts = {}                  # rid -> budget charges so far
+        retry_q: list = []             # (t_ready, seq, Request)
+        events: list = []              # (t, seq, kind, replica, gen)
+        fail_t = {}
+        ttr: List[float] = []
+        swapped = set()
+        lat_window: deque = deque(maxlen=policy.window if policy else 64)
+        scale_events: List[dict] = []
+        last_scale_t = float("-inf")
+        next_eval = policy.interval if policy else float("inf")
+        ctr = {"retries": 0, "failures": 0, "recoveries": 0,
+               "degraded": 0, "swapped": 0, "steals": 0,
+               "scale_up": 0, "scale_down": 0}
+
+        # occupancy/busy integrals: occ_int is filled-slot-seconds,
+        # busy is seconds with >= 1 filled slot
+        busy = [0.0] * nq
+        occ_int = [0.0] * nq
+        last_t = [0.0] * nq
+
+        def tick(r, t):
+            # settle r's occupancy integral up to t (call BEFORE
+            # mutating slots[r])
+            dt = t - last_t[r]
+            if dt <= 0:
+                return
+            n = len(slots[r])
+            if n:
+                occ_int[r] += n * dt
+                busy[r] += dt
+            last_t[r] = t
+
+        fault_it = iter(faults) if faults is not None else iter(())
+        next_fault = next(fault_it, None)
+
+        def pull_faults(t):
+            nonlocal next_fault
+            while next_fault is not None and next_fault.t <= t:
+                e, next_fault = next_fault, next(fault_it, None)
+                if e.kind == "fail":
+                    heapq.heappush(events,
+                                   (e.t, next(seq), "fail", e.replica, -1))
+                else:
+                    t_up = e.t + eng._versions[
+                        version[e.replica]]["t_restore"]
+                    heapq.heappush(events,
+                                   (t_up, next(seq), "up", e.replica, -1))
+
+        def readmit(req, t, charge=True):
+            # identical budget semantics to the gang engine: a charged
+            # readmission consumes one retry; past the budget the
+            # request ends as an explicit failed Completion
+            if not charge:
+                heapq.heappush(retry_q, (t, next(seq), req))
+                return
+            a = attempts.get(req.rid, 0) + 1
+            attempts[req.rid] = a
+            if a > eng.retries:
+                done.append(Completion(
+                    rid=req.rid, pred=-1, t_arrival=req.t_arrival,
+                    t_done=t, replica=-1, status="failed",
+                    attempts=a - 1))
+                return
+            ctr["retries"] += 1
+            delay = eng.backoff * (2 ** (a - 1)) if eng.backoff else 0.0
+            heapq.heappush(retry_q, (t + delay, next(seq), req))
+
+        def t_bound(r):
+            # boundary cadence: one slot-fill opportunity per microbatch
+            tr = eng._versions[version[r]]["t_round"]
+            return tr / (B if eng.pp_stages == 1 else eng.n_micro)
+
+        def arm(r, t):
+            if armed[r]:
+                return False
+            armed[r] = True
+            heapq.heappush(events, (t, next(seq), "boundary", r, gen[r]))
+            return True
+
+        def serving_ids():
+            return [r for r in range(nq)
+                    if active[r] and up[r] and not draining[r]]
+
+        def admit_preds(take, v):
+            # one padded single-replica forward per admission group —
+            # row-independent, so preds match cnn_forward exactly
+            if not eng.execute or not take:
+                return [-1] * len(take)
+            imgs = np.stack([q.image for q in take])
+            if len(take) < B:
+                pad = np.zeros((B - len(take),) + imgs.shape[1:],
+                               imgs.dtype)
+                imgs = np.concatenate([imgs, pad])
+            preds = np.asarray(eng._slot_fn(v)(imgs))
+            return [int(p) for p in preds[:len(take)]]
+
+        # -- rolling hot swap (graceful drain, one replica at a time) ---
+        def start_next_swap(t):
+            sw = eng._pending_swap
+            while sw["todo"] and sw["current"] is None:
+                r = sw["todo"].pop(0)
+                if not active[r]:
+                    continue            # scaled away since the roll began
+                if not up[r]:
+                    # a down replica restores from the new artifact when
+                    # its recovery lands — no drain needed
+                    version[r] = sw["version"]
+                    swapped.add(r)
+                    ctr["swapped"] += 1
+                    continue
+                draining[r] = True
+                drain_kind[r] = "swap"
+                sw["current"] = r
+                for req in router.evacuate(r):
+                    readmit(req, t, charge=False)
+                if not slots[r]:
+                    finish_swap_drain(r, t)
+            if not sw["todo"] and sw["current"] is None:
+                sw["state"] = "done"
+
+        def finish_swap_drain(r, t):
+            # in-flight slots finished: go down for the artifact restore
+            sw = eng._pending_swap
+            tick(r, t)
+            up[r] = False
+            gen[r] += 1
+            armed[r] = False
+            heapq.heappush(events, (t + sw["t_restore"], next(seq),
+                                    "swapped", r, -1))
+
+        def maybe_start_swap(t):
+            sw = eng._pending_swap
+            if sw is None or sw["state"] != "armed" or t < sw["at"]:
+                return
+            sw["state"] = "rolling"
+            sw["todo"] = [r for r in range(nq) if active[r]]
+            sw["current"] = None
+            start_next_swap(t)
+
+        # -- elastic scaling --------------------------------------------
+        def scale_up(t, reason):
+            free = [r for r in range(nq) if not active[r]]
+            if not free:
+                return False
+            r = free[0]
+            active[r] = True
+            up[r] = False               # serves only after the restore
+            draining[r] = False
+            drain_kind[r] = None
+            version[r] = eng._cur_version
+            gen[r] += 1
+            starting.add(r)
+            last_t[r] = t
+            t_up = t + eng._versions[version[r]]["t_restore"]
+            heapq.heappush(events, (t_up, next(seq), "scaleup", r, -1))
+            ctr["scale_up"] += 1
+            scale_events.append(asdict(ScaleEvent(
+                t=t, kind="up", replica=r, reason=reason)))
+            return True
+
+        def finalize_down(r, t):
+            tick(r, t)
+            active[r] = False
+            up[r] = False
+            draining[r] = False
+            drain_kind[r] = None
+            gen[r] += 1
+            armed[r] = False
+
+        def scale_down(r, t, reason):
+            # graceful drain (the hot_swap primitive): queued requests
+            # re-dispatch free of retry charge, in-flight slots finish
+            draining[r] = True
+            drain_kind[r] = "scale"
+            for req in router.evacuate(r):
+                readmit(req, t, charge=False)
+            ctr["scale_down"] += 1
+            scale_events.append(asdict(ScaleEvent(
+                t=t, kind="down", replica=r, reason=reason)))
+            if not slots[r]:
+                finalize_down(r, t)
+
+        def autoscale_eval(t):
+            nonlocal last_scale_t
+            sw = eng._pending_swap
+            if sw is not None and sw["state"] == "rolling":
+                return                  # one fleet mutation at a time
+            srv = serving_ids()
+            committed = [r for r in range(nq)
+                         if active[r] and not draining[r]]
+            load = sum(len(slots[r]) for r in srv) + router.backlog()
+            cap = len(srv) * B
+            util = (load / cap) if cap else \
+                (float("inf") if load else 0.0)
+            p95w = (nearest_rank(sorted(lat_window), 0.95)
+                    if lat_window else 0.0)
+            slo_bad = eng.slo > 0 and p95w > eng.slo
+            if t - last_scale_t < policy.cooldown:
+                return
+            reason = f"util={util:.2f} p95={p95w * 1e3:.1f}ms"
+            if (util > policy.util_high or slo_bad) and \
+                    len(committed) < policy.max_replicas:
+                if scale_up(t, reason):
+                    last_scale_t = t
+            elif (util < policy.util_low and not slo_bad and not starting
+                  and len(committed) > policy.min_replicas and srv):
+                # drain the serving replica with the least work in it
+                r = min(srv, key=lambda i: (len(slots[i])
+                                            + len(router.queues[i]), -i))
+                scale_down(r, t, reason)
+                last_scale_t = t
+
+        # -- the boundary: retire -> drain-check -> fill -> steal -------
+        def on_boundary(r, t, g):
+            nonlocal boundaries
+            if g != gen[r] or not active[r] or not up[r]:
+                return                  # stale: superseded by fail/drain
+            armed[r] = False
+            boundaries += 1
+            if any(active[i] and not up[i] and i not in starting
+                   for i in range(nq)):
+                ctr["degraded"] += 1
+            eps = 1e-9 * max(t, 1.0)
+            due = [s for s in slots[r] if s.t_ready <= t + eps]
+            if due:
+                tick(r, t)
+                slots[r] = [s for s in slots[r] if s.t_ready > t + eps]
+                for s in due:           # each request retires on its own
+                    done.append(Completion(
+                        rid=s.req.rid, pred=s.pred,
+                        t_arrival=s.req.t_arrival, t_done=t, replica=r,
+                        version=s.version,
+                        attempts=attempts.get(s.req.rid, 0)))
+                    lat_window.append(t - s.req.t_arrival)
+            if draining[r] and not slots[r]:
+                if drain_kind[r] == "swap":
+                    finish_swap_drain(r, t)
+                else:
+                    finalize_down(r, t)
+                return
+            if not draining[r]:
+                free = B - len(slots[r])
+                take = router.queues[r].pop(free) if free > 0 else []
+                if take:
+                    tick(r, t)
+                    preds = admit_preds(take, version[r])
+                    tr = eng._versions[version[r]]["t_round"]
+                    for req, p in zip(take, preds):
+                        slots[r].append(
+                            _Slot(t + req.cost * tr, req, p, version[r]))
+                if eng.steal_threshold > 0:
+                    donors = [d for d in serving_ids() if d != r]
+                    if donors:
+                        d = max(donors,
+                                key=lambda i: (len(router.queues[i]), -i))
+                        if (len(router.queues[d]) - len(router.queues[r])
+                                > eng.steal_threshold):
+                            req = router.steal(d)
+                            if req is not None:
+                                a = attempts.get(req.rid, 0) + 1
+                                if a > eng.retries:
+                                    # never steal an exhausted budget —
+                                    # a steal must not fail a request
+                                    router.queues[d].submit(req)
+                                    no_steal_until[r] = t + t_bound(r)
+                                else:
+                                    attempts[req.rid] = a
+                                    ctr["steals"] += 1
+                                    router.queues[r].submit(req)
+            if slots[r] or len(router.queues[r]):
+                armed[r] = True
+                heapq.heappush(events, (t + t_bound(r), next(seq),
+                                        "boundary", r, gen[r]))
+
+        def handle_event(kind, r, t, g):
+            sw = eng._pending_swap
+            if kind == "boundary":
+                on_boundary(r, t, g)
+            elif kind == "fail":
+                if not active[r] or not up[r]:
+                    return              # already down
+                tick(r, t)
+                up[r] = False
+                ctr["failures"] += 1
+                fail_t[r] = t
+                gen[r] += 1
+                armed[r] = False
+                for s in slots[r]:      # in-flight slots are lost
+                    readmit(s.req, t)
+                slots[r] = []
+                for req in router.evacuate(r):
+                    readmit(req, t)
+                if draining[r] and drain_kind[r] == "swap" and \
+                        sw is not None and sw.get("current") == r:
+                    # the dying replica restores from the NEW artifact
+                    version[r] = sw["version"]
+                    swapped.add(r)
+                    ctr["swapped"] += 1
+                    draining[r] = False
+                    drain_kind[r] = None
+                    sw["current"] = None
+                    start_next_swap(t)
+                elif draining[r] and drain_kind[r] == "scale":
+                    finalize_down(r, t)
+            elif kind == "up":
+                if not active[r] or up[r]:
+                    return
+                if sw is not None and sw.get("current") == r:
+                    return              # the swap's restore owns r
+                if r in starting:
+                    return              # the scale-up's restore owns r
+                up[r] = True
+                gen[r] += 1
+                last_t[r] = t
+                ctr["recoveries"] += 1
+                if r in fail_t:
+                    ttr.append(t - fail_t.pop(r))
+            elif kind == "scaleup":
+                starting.discard(r)
+                if not active[r] or up[r]:
+                    return              # cancelled / already recovered
+                up[r] = True
+                gen[r] += 1
+                last_t[r] = t
+            elif kind == "swapped":
+                if sw is None:
+                    return
+                version[r] = sw["version"]
+                up[r] = True
+                gen[r] += 1
+                last_t[r] = t
+                draining[r] = False
+                drain_kind[r] = None
+                swapped.add(r)
+                ctr["swapped"] += 1
+                fail_t.pop(r, None)
+                sw["current"] = None
+                start_next_swap(t)
+
+        # -- the discrete-event loop ------------------------------------
+        while True:
+            pull_faults(clock)
+            moved = True
+            while moved:                # fixed point at this timestamp
+                moved = False
+                if events and events[0][0] <= clock:
+                    t_e, _, kind, r, g = heapq.heappop(events)
+                    handle_event(kind, r, t_e, g)
+                    moved = True
+                    continue
+                maybe_start_swap(clock)
+                if policy and next_eval <= clock:
+                    autoscale_eval(clock)
+                    next_eval += policy.interval
+                    moved = True
+                    continue
+                mask = [active[i] and up[i] and not draining[i]
+                        for i in range(nq)]
+                if any(mask):
+                    if pending and pending[0].t_arrival <= clock:
+                        router.dispatch(pending.pop(0), mask)
+                        moved = True
+                        continue
+                    if retry_q and retry_q[0][0] <= clock:
+                        _, _, req = heapq.heappop(retry_q)
+                        router.dispatch(req, mask)
+                        moved = True
+                        continue
+                # arm a boundary wherever there is queued work — or an
+                # idle replica that could steal across a deep skew
+                depths = router.depths()
+                deepest = max((depths[i] for i in serving_ids()),
+                              default=0)
+                for r in serving_ids():
+                    if armed[r]:
+                        continue
+                    if depths[r] or slots[r] or (
+                            eng.steal_threshold > 0
+                            and eng.retries > 0
+                            and clock >= no_steal_until[r]
+                            and deepest - depths[r] > eng.steal_threshold):
+                        if arm(r, clock):
+                            moved = True
+            outstanding = (bool(pending) or bool(retry_q)
+                           or router.backlog() > 0
+                           or any(slots[r] for r in range(nq)))
+            if not outstanding:
+                break
+            # traffic waiting, nothing serving, nothing scheduled to
+            # recover: the emergency scale-up (liveness under autoscale)
+            if (policy and not serving_ids() and not starting
+                    and not events and next_fault is None):
+                if scale_up(clock, "emergency: no serving replica"):
+                    last_scale_t = clock
+                    continue
+            srv_now = serving_ids()
+            cands = []
+            if srv_now:
+                if pending:
+                    cands.append(pending[0].t_arrival)
+                if retry_q:
+                    cands.append(retry_q[0][0])
+            if events:
+                cands.append(events[0][0])
+            if next_fault is not None:
+                cands.append(next_fault.t)
+            if policy and (srv_now or starting or events
+                           or next_fault is not None):
+                cands.append(next_eval)
+            if not cands:
+                # dead fleet, no recovery, no elasticity left: fail
+                # every outstanding request explicitly — none stranded
+                for req in pending + [e[2] for e in retry_q]:
+                    done.append(Completion(
+                        rid=req.rid, pred=-1, t_arrival=req.t_arrival,
+                        t_done=max(clock, req.t_arrival), replica=-1,
+                        status="failed",
+                        attempts=attempts.get(req.rid, 0)))
+                pending, retry_q = [], []
+                break
+            clock = max(clock, min(cands))
+
+        for r in range(nq):
+            tick(r, clock)
+        sw = eng._pending_swap
+        if sw is not None:
+            # stream ended before the roll finished: finalize the
+            # remaining version flips without extending the makespan
+            for r in range(nq):
+                if active[r] and r not in swapped:
+                    swapped.add(r)
+                    ctr["swapped"] += 1
+            eng._adopt_version(sw["version"])
+            eng._pending_swap = None
+        makespan = clock
+        occupancy = [occ_int[r] / (makespan * B) if makespan > 0 else 0.0
+                     for r in range(nq)]
+        rep = fleet_report(
+            done, router.rejected, mode=eng.mode, replicas=R0,
+            pp_stages=eng.pp_stages, batch=B, clock=eng.clock_mode,
+            rounds=boundaries, busy_s=busy, makespan_s=makespan,
+            bubble_fraction=(eng.stage_plan.bubble(eng.n_micro)
+                             if eng.stage_plan else 0.0),
+            n_retries=ctr["retries"], n_failures=ctr["failures"],
+            n_recoveries=ctr["recoveries"],
+            degraded_rounds=ctr["degraded"], time_to_recover_s=ttr,
+            n_swapped=ctr["swapped"], slo_s=eng.slo,
+            scheduler="continuous", occupancy=occupancy,
+            n_steals=ctr["steals"], n_scale_up=ctr["scale_up"],
+            n_scale_down=ctr["scale_down"], scale_events=scale_events,
+            replicas_final=sum(active))
+        return done, rep

@@ -13,6 +13,7 @@ import repro.kernels.ops as ops
 import repro.pipeline as pipeline
 
 PIPELINE_SURFACE = {
+    "AutoscalePolicy",
     "CompiledCNN",
     "ExecutionSpec",
     "Placement",
@@ -81,8 +82,13 @@ def test_execution_spec_subspec_fields():
     assert sorted(f.name for f in dataclasses.fields(pipeline.Placement)) \
         == ["microbatches", "pp_stages", "replicas"]
     assert sorted(f.name for f in dataclasses.fields(pipeline.Serving)) \
-        == ["backoff", "batch", "clock", "execute", "max_queue",
-            "retries", "slo"]
+        == ["autoscale", "backoff", "batch", "clock", "execute",
+            "max_queue", "retries", "scheduler", "slo",
+            "steal_threshold"]
+    assert sorted(f.name for f in
+                  dataclasses.fields(pipeline.AutoscalePolicy)) \
+        == ["cooldown", "interval", "max_replicas", "min_replicas",
+            "util_high", "util_low", "window"]
     assert sorted(f.name for f in
                   dataclasses.fields(pipeline.ExecutionSpec)) \
         == ["interpret", "placement", "precision", "serving", "tiling",

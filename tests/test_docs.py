@@ -1,0 +1,64 @@
+"""Docs integrity: every path a README references must exist.
+
+The READMEs are the architecture map (top-level quickstart +
+per-subsystem docs); a renamed module or example silently rots them.
+This test extracts path-like tokens — markdown link targets and
+backticked inline code that looks like a repo path — from every
+README.md and asserts each resolves relative to the README's directory,
+its parent, or the repo root.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+READMES = sorted(p for p in REPO.rglob("README.md")
+                 if ".pytest_cache" not in p.parts
+                 and "node_modules" not in p.parts)
+
+LINK_RE = re.compile(r"\]\(([^)\s]+)\)")          # [text](target)
+CODE_RE = re.compile(r"`([^`\n]+)`")              # `token`
+FENCE_RE = re.compile(r"```.*?```", re.DOTALL)    # fenced blocks
+
+
+def _candidates(text):
+    text = FENCE_RE.sub("", text)
+    for target in LINK_RE.findall(text):
+        if not target.startswith(("http://", "https://", "#", "mailto:")):
+            yield target
+    for tok in CODE_RE.findall(text):
+        # a backticked token counts as a path claim only when it is one
+        # unambiguous relative path to a source/doc file
+        if ("/" in tok and re.fullmatch(r"[\w./-]+\.(py|md|yml|json)", tok)
+                and not tok.startswith("/")):
+            yield tok
+
+
+def _resolves(readme: Path, target: str) -> bool:
+    target = target.split("#")[0]
+    if not target:
+        return True
+    roots = (readme.parent, readme.parent.parent, REPO)
+    return any((r / target).exists() for r in roots)
+
+
+def test_readmes_exist_where_the_top_level_readme_says():
+    top = REPO / "README.md"
+    assert top.exists(), "top-level README.md missing"
+    text = top.read_text()
+    for sub in ("src/repro/kernels/README.md",
+                "src/repro/pipeline/README.md",
+                "src/repro/serve/README.md"):
+        assert sub in text, f"top README does not link {sub}"
+        assert (REPO / sub).exists(), f"{sub} linked but missing"
+
+
+@pytest.mark.parametrize("readme", READMES,
+                         ids=[str(p.relative_to(REPO)) for p in READMES])
+def test_readme_paths_resolve(readme):
+    broken = sorted({t for t in _candidates(readme.read_text())
+                     if not _resolves(readme, t)})
+    assert not broken, (
+        f"{readme.relative_to(REPO)} references missing paths: {broken}")
