@@ -211,7 +211,12 @@ def fleet_bench(fast: bool) -> dict:
       scheduler (per-slot retirement + work stealing);
     * ``cb_vs_gang(alexnet)`` — the PR 7 acceptance row: under that
       skewed trace, continuous batching must beat the gang scheduler's
-      p95 latency (enforced by main()).
+      p95 latency (enforced by main());
+    * ``{arch}_fleet_cb_traced_model`` — the observability row (PR 8):
+      the cb simulation re-run with a ``TraceRecorder`` and
+      ``MetricsRegistry`` attached. Instrumentation never touches the
+      modeled clock, so the traced report must be IDENTICAL to the
+      untraced cb row (``traced_identical``, enforced by main()).
     """
     import dataclasses as _dc
 
@@ -301,11 +306,12 @@ def fleet_bench(fast: bool) -> dict:
                         cost=4.0 if i % 17 == 16 else 1.0)
                 for i in range(N_REQ)]
 
-        def sched_sim(**kw):
+        def sched_sim(trace=None, metrics=None, **kw):
             eng = ServeEngine(cfg, [], batch=BATCH, replicas=2,
                               clock="modeled", execute=False, retries=2,
                               **kw)
-            done, rep = eng.serve(list(skew))
+            done, rep = eng.serve(list(skew), trace=trace,
+                                  metrics=metrics)
             assert sorted(c.rid for c in done) == list(range(N_REQ))
             return rep
 
@@ -319,6 +325,26 @@ def fleet_bench(fast: bool) -> dict:
                           "throughput_img_s": rep.throughput,
                           "p95_ms": rep.p95_ms,
                           "n_steals": rep.n_steals}}
+        # observability row (PR 8): the SAME cb simulation re-run with a
+        # TraceRecorder + MetricsRegistry attached. Instrumentation must
+        # never advance the modeled clock, so tracing overhead on modeled
+        # rows is exactly ZERO: the traced report — and therefore this
+        # row's us_per_call — is byte-identical to the untraced cb row
+        # (``traced_identical``, enforced by main() like the other
+        # invariants)
+        from repro.obs import MetricsRegistry, TraceRecorder
+        t_rec, m_reg = TraceRecorder(), MetricsRegistry()
+        trep = sched_sim(scheduler="continuous", steal_threshold=1,
+                         trace=t_rec, metrics=m_reg)
+        rows[f"{name}_fleet_cb_traced_model"] = {
+            "us_per_call": 1e6 / trep.throughput,
+            "fleet": {"mode": trep.mode, "replicas": 2, "pp_stages": 1,
+                      "batch": BATCH, "scheduler": trep.scheduler,
+                      "throughput_img_s": trep.throughput,
+                      "p95_ms": trep.p95_ms,
+                      "trace_events": len(t_rec),
+                      "traced_identical":
+                          trep.to_dict() == crep2.to_dict()}}
         rows[f"cb_vs_gang({name})"] = {
             "gang_p95_ms": grep.p95_ms, "cb_p95_ms": crep2.p95_ms,
             "p95_speedup": grep.p95_ms / crep2.p95_ms,
@@ -481,6 +507,15 @@ def main() -> None:
         f"trace (acceptance: cb < gang)"
         for name, row in conv_rows.items()
         if name.startswith("cb_vs_gang(") and not row["cb_beats_gang_p95"]]
+    # and the observability acceptance (PR 8): attaching a trace/metrics
+    # recorder must not perturb the modeled run at all — the traced cb
+    # report must equal the untraced one field-for-field
+    violations += [
+        f"{name}: tracing perturbed the modeled run (traced report != "
+        f"untraced cb report; instrumentation must not touch the clock)"
+        for name, row in conv_rows.items()
+        if name.endswith("_fleet_cb_traced_model")
+        and not row["fleet"]["traced_identical"]]
     # and the compile-once acceptance (PR 5): a warm recompile — and
     # therefore a compile seeded from a committed save_plan table —
     # must perform ZERO DSE sweeps

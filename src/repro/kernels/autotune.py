@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import json
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Tuple
 
@@ -537,8 +537,22 @@ def registry_snapshot() -> List[dict]:
 
 
 def dump_registry(path: str) -> None:
-    with open(path, "w") as f:
-        json.dump(registry_snapshot(), f, indent=1)
+    """Deprecated: write the unified registry export instead.
+
+    Historically this wrote a bare JSON list of conv records, a third
+    export shape next to the plan table. There is now ONE shape — the
+    provenance-carrying ``PlanTable`` document — so this shim writes
+    ``repro.pipeline.PlanTable.from_registry().save(path)`` (conv + gemm
+    + sweep-stat provenance) and warns. Imported lazily to keep
+    ``repro.kernels`` free of a pipeline dependency.
+    """
+    warnings.warn(
+        "autotune.dump_registry is deprecated; use "
+        "repro.pipeline.PlanTable.from_registry().save(path) — the "
+        "output is now the PlanTable format, not a bare list",
+        DeprecationWarning, stacklevel=2)
+    from repro.pipeline.plan_table import PlanTable
+    PlanTable.from_registry().save(path)
 
 
 def seed_registry(conv_rows: List[dict] = (),

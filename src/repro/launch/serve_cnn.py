@@ -29,6 +29,14 @@ utilization signals. ``--straggler-every``/``--straggler-cost`` salt
 the synthetic trace with heavy requests — the pathology that separates
 the two schedulers.
 
+PR 8 adds the observability surface: ``--trace-out`` records the run as
+Chrome trace-event JSON (per-replica tracks of request/round spans plus
+fleet instants — open in Perfetto), ``--metrics-out`` snapshots the
+:class:`~repro.obs.MetricsRegistry` the serve loop feeds (``.prom``
+suffix for Prometheus text format), and ``--report-json`` dumps
+``FleetReport.to_dict()``. All three are derived from the same counters
+the report prints, so ``repro.obs.validate`` can reconcile them exactly.
+
 Multi-device runs on CPU need forced host devices, e.g.::
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -217,6 +225,17 @@ def main() -> None:
                          "(0 = none)")
     ap.add_argument("--straggler-cost", type=float, default=4.0,
                     help="relative service weight of a straggler request")
+    # -- observability flags ------------------------------------------------
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(load in Perfetto / chrome://tracing); "
+                         "byte-deterministic under --clock modeled")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics snapshot (counters, gauges, "
+                         "latency histograms); a .prom suffix switches "
+                         "to Prometheus text exposition format")
+    ap.add_argument("--report-json", default=None, metavar="PATH",
+                    help="dump FleetReport.to_dict() as JSON")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -296,7 +315,13 @@ def main() -> None:
     if faults is not None:
         print(f"[serve_cnn] chaos: {faults!r}, retries={args.retries}, "
               f"backoff={args.backoff}s")
-    rep = compiled.serve(requests, faults=faults)
+    trace = metrics = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import MetricsRegistry, TraceRecorder
+        trace = TraceRecorder() if args.trace_out else None
+        metrics = MetricsRegistry() if args.metrics_out else None
+    rep = compiled.serve(requests, faults=faults, trace=trace,
+                         metrics=metrics)
     # the resilience invariant: every request ends as exactly one
     # completion (ok or explicitly failed) or one admission rejection
     assert len(rep.completions) + rep.n_rejected == n_req, \
@@ -336,6 +361,19 @@ def main() -> None:
         print(f"[serve_cnn] plan table: {len(rows)} conv plans + "
               f"{len(gemm)} GEMM plans compiled ({dtype}); conv "
               f"(b,c,m,oh)_blk points: {picked}")
+    if trace is not None:
+        trace.save(args.trace_out)
+        print(f"[serve_cnn] trace: {len(trace)} events -> "
+              f"{args.trace_out}")
+    if metrics is not None:
+        metrics.save(args.metrics_out)
+        print(f"[serve_cnn] metrics -> {args.metrics_out}")
+    if args.report_json:
+        import json
+        with open(args.report_json, "w") as f:
+            json.dump(rep.to_dict(), f, sort_keys=True, indent=1)
+            f.write("\n")
+        print(f"[serve_cnn] report -> {args.report_json}")
     print("[serve_cnn] OK")
 
 

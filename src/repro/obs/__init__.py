@@ -1,0 +1,53 @@
+"""Observability for the serving stack: tracing, metrics, validation.
+
+Three modules, no dependencies on the rest of ``repro`` (the serve
+loops import *us*):
+
+  * :mod:`repro.obs.trace` — :class:`TraceRecorder`, Chrome trace-event
+    JSON export (Perfetto-viewable), byte-deterministic on the modeled
+    clock;
+  * :mod:`repro.obs.metrics` — :class:`MetricsRegistry` of counters /
+    gauges / histograms / windows, JSON + Prometheus text exports;
+  * :mod:`repro.obs.validate` — schema validation and trace ↔ metrics ↔
+    ``FleetReport`` reconciliation (also a CLI:
+    ``python -m repro.obs.validate``).
+"""
+from .trace import (  # noqa: F401
+    CAT_FLEET,
+    CAT_REQUEST,
+    CAT_ROUND,
+    FLEET_TRACK,
+    TraceRecorder,
+)
+from .metrics import (  # noqa: F401
+    DEFAULT_LATENCY_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    WindowSeries,
+    record_report,
+)
+from .validate import (  # noqa: F401
+    reconcile,
+    validate_metrics,
+    validate_trace,
+)
+
+__all__ = [
+    "TraceRecorder",
+    "CAT_REQUEST",
+    "CAT_ROUND",
+    "CAT_FLEET",
+    "FLEET_TRACK",
+    "MetricsRegistry",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "WindowSeries",
+    "DEFAULT_LATENCY_BUCKETS",
+    "record_report",
+    "validate_trace",
+    "validate_metrics",
+    "reconcile",
+]

@@ -1,0 +1,158 @@
+"""Event tracing for the serving stack: Chrome trace-event JSON.
+
+The discrete-event loops in ``repro.serve.engine`` (gang rounds) and
+``repro.serve.scheduler`` (continuous batching) feed a
+:class:`TraceRecorder` with typed spans and instants — the per-request
+lifecycle (enqueue → admit → execute → retire / steal / retry /
+failed), per-replica tracks, and fleet-level instants for replica
+fail/recover, hot-swap rolls and autoscale decisions. The recorder
+exports the Chrome trace-event format (``{"traceEvents": [...]}``),
+which Perfetto / ``chrome://tracing`` load directly: one process
+("repro.serve"), one thread track per replica plus a "fleet" track for
+fleet-scope instants.
+
+Determinism is a contract, not an accident: on the modeled clock every
+timestamp derives from the roofline model, the recorder assigns
+track ids and sequence numbers in emission order, and ``to_json`` is
+canonical (sorted keys, events ordered by ``(ts, tid, seq)``) — two
+identical runs produce byte-identical trace files, which the test
+suite asserts. Recording never touches the simulated clock, so modeled
+benchmark rows are unchanged with tracing on (also asserted).
+
+Span/instant taxonomy (names are the reconciliation contract — the
+validator counts them against ``FleetReport``, see
+``repro.obs.validate``):
+
+  ============  =====  ========  =======================================
+  name          ph     track     meaning
+  ============  =====  ========  =======================================
+  request       X      replica   one served request: admit -> retire
+  round         X      replica   one gang round on one replica
+  enqueue       i      replica   router accepted a request into a queue
+  reject        i      fleet     admission control rejected a request
+  retry         i      fleet     a lost request re-dispatched (budget)
+  failed        i      fleet     retry budget exhausted -> failed
+  steal         i      replica   thief replica stole a queued request
+  fail          i      fleet     a replica failure landed
+  recover       i      fleet     a failed replica restored into dispatch
+  hot_swap      i      fleet     a replica rolled onto a new artifact
+  scale_up      i      fleet     autoscaler spun a replica up
+  scale_down    i      fleet     autoscaler drained a replica out
+  ============  =====  ========  =======================================
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+# Event categories (the "cat" field): filterable lanes in Perfetto.
+CAT_REQUEST = "request"        # per-request lifecycle events
+CAT_ROUND = "round"            # gang-round execution spans
+CAT_FLEET = "fleet"            # fleet mutations (faults, swaps, scaling)
+
+FLEET_TRACK = "fleet"          # the non-replica instant track
+
+
+class TraceRecorder:
+    """Collects typed spans/instants; exports Chrome trace-event JSON.
+
+    All times are in (simulated) seconds; the export converts to the
+    format's microseconds. Tracks are named lanes (``"fleet"``,
+    ``"replica 0"``, ...) assigned thread ids in first-registration
+    order — register tracks up front (the serve loops do) so ids do
+    not depend on event order.
+    """
+
+    PID = 1
+
+    def __init__(self, process_name: str = "repro.serve"):
+        self.process_name = process_name
+        self._events: List[dict] = []
+        self._tracks: Dict[str, int] = {}
+        self._meta: Dict[str, object] = {}
+        self._seq = 0
+
+    # -- tracks ------------------------------------------------------------
+
+    def track(self, name: str) -> int:
+        """Thread id for a named track (registering it on first use)."""
+        if name not in self._tracks:
+            self._tracks[name] = len(self._tracks)
+        return self._tracks[name]
+
+    # -- emission ----------------------------------------------------------
+
+    def _emit(self, ev: dict) -> None:
+        ev["pid"] = self.PID
+        ev["seq"] = self._seq
+        self._seq += 1
+        self._events.append(ev)
+
+    def span(self, name: str, t0: float, t1: float, *,
+             track: str, cat: str = CAT_ROUND,
+             args: Optional[dict] = None) -> None:
+        """A complete event (``ph: "X"``) on ``track``: [t0, t1] seconds."""
+        ev = {"name": name, "cat": cat, "ph": "X",
+              "ts": t0 * 1e6, "dur": (t1 - t0) * 1e6,
+              "tid": self.track(track)}
+        if args:
+            ev["args"] = dict(args)
+        self._emit(ev)
+
+    def instant(self, name: str, t: float, *,
+                track: str = FLEET_TRACK, cat: str = CAT_FLEET,
+                args: Optional[dict] = None) -> None:
+        """A thread-scoped instant event (``ph: "i"``) at ``t`` seconds."""
+        ev = {"name": name, "cat": cat, "ph": "i", "s": "t",
+              "ts": t * 1e6, "tid": self.track(track)}
+        if args:
+            ev["args"] = dict(args)
+        self._emit(ev)
+
+    def set_meta(self, key: str, value) -> None:
+        """Attach run-level metadata (exported under ``otherData``) —
+        e.g. the compiled plan provenance and roofline breakdown, so the
+        trace records which plans its spans executed."""
+        self._meta[key] = value
+
+    # -- counts (reconciliation helpers) -----------------------------------
+
+    def count(self, name: str) -> int:
+        """How many events named ``name`` were recorded — the counters
+        the validator reconciles against ``FleetReport``."""
+        return sum(1 for e in self._events if e["name"] == name)
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    # -- export ------------------------------------------------------------
+
+    def to_chrome(self) -> dict:
+        """The trace as a Chrome trace-event document (Perfetto-loadable).
+
+        Events are ordered by ``(ts, tid, seq)`` — per-track timestamps
+        are monotone non-decreasing in file order, which the validator
+        asserts. Metadata events name the process and every track.
+        """
+        meta_events = [{"name": "process_name", "ph": "M", "pid": self.PID,
+                       "tid": 0, "args": {"name": self.process_name}}]
+        for name, tid in sorted(self._tracks.items(), key=lambda kv: kv[1]):
+            meta_events.append({"name": "thread_name", "ph": "M",
+                                "pid": self.PID, "tid": tid,
+                                "args": {"name": name}})
+        body = sorted(self._events,
+                      key=lambda e: (e["ts"], e["tid"], e["seq"]))
+        events = meta_events + [{k: v for k, v in e.items() if k != "seq"}
+                                for e in body]
+        return {"traceEvents": events, "displayTimeUnit": "ms",
+                "otherData": dict(self._meta)}
+
+    def to_json(self) -> str:
+        """Canonical JSON (sorted keys): byte-identical across identical
+        runs on the modeled clock — the determinism contract."""
+        return json.dumps(self.to_chrome(), sort_keys=True, indent=1) + "\n"
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return path

@@ -1,0 +1,227 @@
+"""Schema validation + reconciliation for serving observability artifacts.
+
+Three checks, each a pure function returning a list of error strings
+(empty = valid), plus a CLI (``python -m repro.obs.validate``) the CI
+serve-fleet job runs on the chaos+autoscale smoke artifacts:
+
+  * :func:`validate_trace` — every span/instant is well-formed Chrome
+    trace-event JSON (name/ph/ts/pid/tid present, durations >= 0) and
+    timestamps are monotone non-decreasing per track in file order;
+  * :func:`validate_metrics` — the snapshot document is well-formed and
+    internally consistent (histogram bucket counts sum to ``count``);
+  * :func:`reconcile` — the three artifacts tell ONE story: trace event
+    counts match the report counters (``n_done``/``n_steals``/
+    ``n_retries``/``n_failed``/``scale_events``), the metrics counters
+    match the same report fields, and the report's p50/p95 fall inside
+    the latency histogram's nearest-rank bucket (the one-bucket
+    reconstruction contract).
+
+Self-contained on purpose: imports nothing from ``repro.serve`` (the
+serve loops import ``repro.obs``), so the validator can also run
+against artifacts from another process or commit.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import List
+
+# Event names whose trace counts must equal a FleetReport counter.
+_TRACE_VS_REPORT = (
+    ("request", "n_done"),
+    ("steal", "n_steals"),
+    ("retry", "n_retries"),
+    ("failed", "n_failed"),
+    ("fail", "n_failures"),
+    ("recover", "n_recoveries"),
+    ("scale_up", "n_scale_up"),
+    ("scale_down", "n_scale_down"),
+)
+
+# Metrics counters whose values must equal a FleetReport field.
+_METRICS_VS_REPORT = (
+    ("serve_done_total", "n_done"),
+    ("serve_failed_total", "n_failed"),
+    ("serve_rejected_total", "n_rejected"),
+    ("serve_retries_total", "n_retries"),
+    ("serve_steals_total", "n_steals"),
+    ("serve_failures_total", "n_failures"),
+    ("serve_recoveries_total", "n_recoveries"),
+    ("serve_swapped_total", "n_swapped"),
+    ("serve_scale_up_total", "n_scale_up"),
+    ("serve_scale_down_total", "n_scale_down"),
+    ("serve_rounds_total", "rounds"),
+)
+
+
+def validate_trace(doc: dict) -> List[str]:
+    """Well-formedness of a Chrome trace-event document."""
+    errors: List[str] = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents is not a list"]
+    last_ts: dict = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event[{i}]: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in ("X", "i", "M"):
+            errors.append(f"event[{i}]: unknown ph {ph!r}")
+            continue
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            errors.append(f"event[{i}]: missing name")
+        if not isinstance(ev.get("pid"), int) \
+                or not isinstance(ev.get("tid"), int):
+            errors.append(f"event[{i}]: pid/tid must be ints")
+            continue
+        if "args" in ev and not isinstance(ev["args"], dict):
+            errors.append(f"event[{i}]: args must be an object")
+        if ph == "M":
+            continue                    # metadata events carry no ts
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errors.append(f"event[{i}]: bad ts {ts!r}")
+            continue
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"event[{i}]: span with bad dur {dur!r}")
+        key = (ev["pid"], ev["tid"])
+        if ts < last_ts.get(key, 0.0):
+            errors.append(
+                f"event[{i}] ({ev['name']}): ts {ts} < {last_ts[key]} — "
+                f"track {key} not monotone")
+        last_ts[key] = ts
+    return errors
+
+
+def validate_metrics(doc: dict) -> List[str]:
+    """Well-formedness + internal consistency of a metrics snapshot."""
+    errors: List[str] = []
+    for section in ("counters", "gauges", "histograms", "windows"):
+        if not isinstance(doc.get(section), dict):
+            return [f"metrics snapshot missing section {section!r}"]
+    for name, v in doc["counters"].items():
+        if not isinstance(v, int) or v < 0:
+            errors.append(f"counter {name}: {v!r} is not an int >= 0")
+    for name, h in doc["histograms"].items():
+        buckets, counts = h.get("buckets", []), h.get("counts", [])
+        if len(counts) != len(buckets) + 1:
+            errors.append(f"histogram {name}: {len(counts)} counts for "
+                          f"{len(buckets)} buckets (want buckets+1)")
+            continue
+        if list(buckets) != sorted(buckets):
+            errors.append(f"histogram {name}: bucket bounds not sorted")
+        if sum(counts) != h.get("count"):
+            errors.append(f"histogram {name}: bucket counts sum to "
+                          f"{sum(counts)} != count {h.get('count')}")
+    for name, w in doc["windows"].items():
+        if len(w.get("values", [])) > w.get("size", 0):
+            errors.append(f"window {name}: more values than its size")
+    return errors
+
+
+def _hist_percentile_bounds(h: dict, q: float):
+    """(lo, hi] of the nearest-rank bucket in a snapshot histogram."""
+    n = h["count"]
+    if n == 0:
+        return None
+    rank = min(max(0, math.ceil(q * n) - 1), n - 1)
+    cum = 0
+    for i, c in enumerate(h["counts"]):
+        cum += c
+        if rank < cum:
+            lo = h["buckets"][i - 1] if i > 0 else 0.0
+            hi = (h["buckets"][i] if i < len(h["buckets"])
+                  else float("inf"))
+            return (lo, hi)
+    return (h["buckets"][-1], float("inf"))
+
+
+def reconcile(report: dict, trace: dict = None,
+              metrics: dict = None) -> List[str]:
+    """Cross-check the artifacts of one run against its report dict."""
+    errors: List[str] = []
+    if trace is not None:
+        counts: dict = {}
+        for ev in trace.get("traceEvents", ()):
+            if ev.get("ph") in ("X", "i"):
+                counts[ev["name"]] = counts.get(ev["name"], 0) + 1
+        for ev_name, field in _TRACE_VS_REPORT:
+            want = report.get(field, 0)
+            got = counts.get(ev_name, 0)
+            if got != want:
+                errors.append(f"trace: {got} {ev_name!r} events != "
+                              f"report.{field} {want}")
+        n_scale = counts.get("scale_up", 0) + counts.get("scale_down", 0)
+        if n_scale != len(report.get("scale_events", ())):
+            errors.append(f"trace: {n_scale} scale instants != "
+                          f"{len(report.get('scale_events', ()))} "
+                          f"report.scale_events")
+    if metrics is not None:
+        for c_name, field in _METRICS_VS_REPORT:
+            want = report.get(field, 0)
+            got = metrics.get("counters", {}).get(c_name, 0)
+            if got != want:
+                errors.append(f"metrics: {c_name}={got} != "
+                              f"report.{field} {want}")
+        hist = metrics.get("histograms", {}).get("request_latency_seconds")
+        if hist is not None and report.get("n_done", 0) > 0:
+            for q, field in ((0.50, "p50_ms"), (0.95, "p95_ms")):
+                bounds = _hist_percentile_bounds(hist, q)
+                if bounds is None:
+                    continue
+                lo, hi = bounds
+                v = report.get(field, float("nan")) / 1e3
+                if not (lo - 1e-12 <= v <= hi + 1e-12):
+                    errors.append(
+                        f"metrics: report.{field} {v * 1e3:.3f} ms "
+                        f"outside its histogram bucket "
+                        f"({lo * 1e3:.3f}, {hi * 1e3:.3f}] ms")
+    return errors
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="validate serving observability artifacts")
+    ap.add_argument("--trace", help="Chrome trace-event JSON path")
+    ap.add_argument("--metrics", help="metrics snapshot JSON path")
+    ap.add_argument("--report", help="FleetReport.to_dict() JSON path")
+    args = ap.parse_args(argv)
+
+    def load(path):
+        with open(path) as f:
+            return json.load(f)
+
+    errors: List[str] = []
+    trace = metrics = None
+    if args.trace:
+        trace = load(args.trace)
+        errs = validate_trace(trace)
+        errors += errs
+        n = len(trace.get("traceEvents", ()))
+        print(f"[obs.validate] trace {args.trace}: {n} events, "
+              f"{len(errs)} errors")
+    if args.metrics:
+        metrics = load(args.metrics)
+        errs = validate_metrics(metrics)
+        errors += errs
+        print(f"[obs.validate] metrics {args.metrics}: "
+              f"{len(metrics.get('counters', {}))} counters, "
+              f"{len(errs)} errors")
+    if args.report:
+        report = load(args.report)
+        errs = reconcile(report, trace=trace, metrics=metrics)
+        errors += errs
+        print(f"[obs.validate] reconcile vs {args.report}: "
+              f"{len(errs)} errors")
+    for e in errors:
+        print(f"[obs.validate] ERROR: {e}")
+    print(f"[obs.validate] {'FAIL' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

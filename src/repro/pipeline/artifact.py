@@ -11,7 +11,13 @@ never a half-artifact a recovering replica would trust.
 Layout:  <dir>/
             manifest.json     - format, cfg, spec, params manifest
                                 (per-array leaf index, shape, dtype)
-            plan_table.json   - PlanTable canonical JSON (byte-stable)
+            plan_table.json   - PlanTable canonical JSON (byte-stable;
+                                format 2 carries the compile's plan
+                                provenance — sweep counts and lookup
+                                totals — which the load re-compile
+                                inherits verbatim, keeping the
+                                save -> load -> save round trip
+                                byte-identical)
             leaf_<i>.npy      - one file per params array
             _COMMITTED        - commit marker (written last)
 

@@ -40,35 +40,46 @@ from repro.pipeline.spec import ExecutionSpec, resolve_config, \
     spec_from_config
 
 
-def _resolve_group_plans(cfg: CNNConfig, batch: int,
-                         dtype: str) -> Dict[Tuple[int, ...], Any]:
-    """One DSE lookup per fusion group at (batch, dtype) — the frozen
-    plan mapping ``CompiledCNN.forward`` executes with. Registry-memoised:
-    a second compile over the same spec is pure cache hits."""
+def _group_shapes(cfg: CNNConfig, batch: int, dtype: str):
+    """Yield ``(group, kind, shape)`` — the tuning key of every fusion
+    group at (batch, dtype): a ``ConvShape`` for conv(+pool) groups, a
+    ``GemmShape`` for fc groups. One shape constructor shared by the DSE
+    resolve and the roofline breakdown, so they can never disagree on
+    what a group's plan was tuned for."""
     from repro.serve.stage_planner import group_io_shapes
 
-    plans: Dict[Tuple[int, ...], Any] = {}
     for group, in_shape, out_shape in group_io_shapes(cfg):
         l = cfg.layers[group[0]]
         if l.kind == "conv":
             h, w, c = in_shape
             pool = cfg.layers[group[1]] if len(group) == 2 else None
-            shape = autotune.ConvShape(
+            yield group, "conv", autotune.ConvShape(
                 h=h, w=w, c=c, kh=l.kernel, kw=l.kernel, m=l.out_ch,
                 stride=l.stride, pad=l.pad, groups=l.groups,
                 pool=(pool.pool if pool else None),
                 pool_k=(pool.kernel if pool else 2),
                 pool_s=(pool.stride if pool else 2), dtype=dtype, b=batch)
-            plans[group] = autotune.get_plan(
-                shape, vmem_budget=cfg.vmem_budget)
         elif l.kind == "fc":
             k = 1
             for d in in_shape:
                 k *= d
+            yield group, "gemm", autotune.GemmShape(
+                m=batch, k=k, n=out_shape[-1], dtype=dtype)
+
+
+def _resolve_group_plans(cfg: CNNConfig, batch: int,
+                         dtype: str) -> Dict[Tuple[int, ...], Any]:
+    """One DSE lookup per fusion group at (batch, dtype) — the frozen
+    plan mapping ``CompiledCNN.forward`` executes with. Registry-memoised:
+    a second compile over the same spec is pure cache hits."""
+    plans: Dict[Tuple[int, ...], Any] = {}
+    for group, kind, shape in _group_shapes(cfg, batch, dtype):
+        if kind == "conv":
+            plans[group] = autotune.get_plan(
+                shape, vmem_budget=cfg.vmem_budget)
+        else:
             plans[group] = autotune.get_gemm_plan(
-                autotune.GemmShape(m=batch, k=k, n=out_shape[-1],
-                                   dtype=dtype),
-                vmem_budget=cfg.vmem_budget)
+                shape, vmem_budget=cfg.vmem_budget)
     return plans
 
 
@@ -194,7 +205,8 @@ class CompiledCNN:
                        use_pallas=self.spec.use_pallas,
                        plans=self.group_plans)
 
-    def serve(self, requests: List, *, faults=None):
+    def serve(self, requests: List, *, faults=None, trace=None,
+              metrics=None):
         """Drain a request stream through the compiled fleet.
 
         Returns the :class:`~repro.serve.report.FleetReport`; the
@@ -203,15 +215,63 @@ class CompiledCNN:
         :class:`~repro.serve.faults.FaultSchedule`) injects replica
         fail/recover chaos into the run — requests lost to a failure
         retry per ``spec.serving.retries``/``backoff``.
+
+        ``trace`` (a :class:`repro.obs.TraceRecorder`) and ``metrics``
+        (a :class:`repro.obs.MetricsRegistry`) export the run's event
+        timeline and metric streams; the trace additionally carries this
+        compile's plan provenance and modeled roofline breakdown in its
+        ``otherData``, so every span says which plans it executed.
         """
         if self.engine is None:
             from repro.serve.engine import ServeEngine
             self.engine = ServeEngine.from_spec(self.cfg, self.params,
                                                 self.spec)
+        if trace is not None:
+            trace.set_meta("compiled", repr(self))
+            trace.set_meta("plan_provenance", self.plan_table.provenance)
+            trace.set_meta("roofline_breakdown", self.roofline_breakdown())
         with self._ctx():
-            done, rep = self.engine.serve(requests, faults=faults)
+            done, rep = self.engine.serve(requests, faults=faults,
+                                          trace=trace, metrics=metrics)
         rep.completions = done
         return rep
+
+    def roofline_breakdown(self) -> List[dict]:
+        """Per-fusion-group modeled time split at the compiled serving
+        batch: where the roofline model says a request's time goes.
+
+        One dict per group — the group's layer indices, kind, its chosen
+        plan (as ``to_dict``), the compute/memory roofline terms in
+        seconds (conv terms scaled to the batch; GEMM terms are already
+        per call at the batch), their max ``t_model``, and which side
+        binds. This is the modeled Fig.-7 view the measured-autotuning
+        work will be compared against.
+        """
+        batch = self.spec.serving.batch
+        dtype = "int8" if self.quant else self.spec.run_dtype
+        rows: List[dict] = []
+        for group, kind, shape in _group_shapes(self.cfg, batch, dtype):
+            plan = self.group_plans.get(group)
+            if kind == "conv":
+                if plan is None:        # registry-memoised either way
+                    plan = autotune.get_plan(
+                        shape, vmem_budget=self.cfg.vmem_budget)
+                tc, tm = autotune.score_plan(
+                    shape, plan.c_blk, plan.m_blk, plan.oh_blk,
+                    plan.b_blk)
+                tc, tm = tc * batch, tm * batch   # per-image -> batch
+            else:
+                if plan is None:
+                    plan = autotune.get_gemm_plan(
+                        shape, vmem_budget=self.cfg.vmem_budget)
+                tc, tm = autotune.score_gemm_plan(
+                    shape, plan.bm, plan.bn, plan.bk)
+            rows.append({"group": list(group), "kind": kind,
+                         "plan": plan.to_dict(),
+                         "t_compute": tc, "t_memory": tm,
+                         "t_model": max(tc, tm),
+                         "bound": "compute" if tc >= tm else "memory"})
+        return rows
 
     # -- the frozen plans as data ------------------------------------------
 
@@ -318,6 +378,7 @@ def compile_cnn(cfg: CNNConfig, spec: Optional[ExecutionSpec] = None,
         plans.seed()
 
     # -- compile: calibration, DSE, stage planning, mesh -------------------
+    sweeps_before = autotune.sweep_stats()
     with autotune.record_lookups() as rec:
         if quantize and not isinstance(params, QuantizedCNNParams):
             if calib is None:
@@ -350,7 +411,21 @@ def compile_cnn(cfg: CNNConfig, spec: Optional[ExecutionSpec] = None,
             # construction happen HERE, inside the compile
             engine = ServeEngine.from_spec(rcfg, params, spec)
 
-    table = PlanTable.from_rows(rec["conv"], rec["gemm"])
+    if plans is not None:
+        # a seeded compile re-captures the SAME plans: carry the seed
+        # table's provenance verbatim so save -> load -> re-compile ->
+        # save stays byte-identical (the artifact round-trip contract)
+        provenance = dict(plans.provenance)
+    else:
+        sweeps_after = autotune.sweep_stats()
+        provenance = {
+            "sweep_stats": {k: sweeps_after[k] - sweeps_before[k]
+                            for k in sorted(sweeps_after)},
+            "lookups": {"conv": len(rec["conv"]),
+                        "gemm": len(rec["gemm"])},
+        }
+    table = PlanTable.from_rows(rec["conv"], rec["gemm"],
+                                provenance=provenance)
     return CompiledCNN(cfg=rcfg, spec=spec, params=params, quant=quant,
                        group_plans=group_plans, plan_table=table,
                        engine=engine)

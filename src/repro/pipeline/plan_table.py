@@ -11,16 +11,25 @@ already uses. A committed table round-trips byte-identically
 into a fresh process, seeds the autotune registries so a re-compile is
 pure cache hits — zero DSE sweeps (asserted by tests via
 ``autotune.sweep_stats``).
+Format 2 adds **provenance**: a free-form (but JSON-canonical) dict
+recording where the plans came from — the compile's DSE sweep counts
+(``autotune.sweep_stats`` delta), lookup totals, and anything else the
+producer wants a trace/report to show about the plans its spans
+executed. Provenance is carried and round-tripped byte-identically but
+excluded from equality: two tables with the same plans are the same
+table, however they were arrived at. Format-1 files (no provenance)
+still load.
 """
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Tuple
 
 from repro.kernels import autotune
 
-_FORMAT = 1
+_FORMAT = 2
+_ACCEPTED_FORMATS = (1, 2)
 
 
 def _canon(rows: List[dict]) -> Tuple[dict, ...]:
@@ -36,10 +45,28 @@ class PlanTable:
     """Immutable, JSON-round-trippable set of tuned plans."""
     conv: Tuple[dict, ...] = ()
     gemm: Tuple[dict, ...] = ()
+    # how the plans were obtained (sweep counts, lookup totals, ...);
+    # compare=False: identical plans == identical table, regardless of
+    # whether a compile swept or was seeded from a committed artifact
+    provenance: dict = field(default_factory=dict, compare=False)
 
     @classmethod
-    def from_rows(cls, conv: List[dict], gemm: List[dict]) -> "PlanTable":
-        return cls(conv=_canon(conv), gemm=_canon(gemm))
+    def from_rows(cls, conv: List[dict], gemm: List[dict],
+                  provenance: dict = None) -> "PlanTable":
+        return cls(conv=_canon(conv), gemm=_canon(gemm),
+                   provenance=dict(provenance or {}))
+
+    @classmethod
+    def from_registry(cls, provenance: dict = None) -> "PlanTable":
+        """Snapshot the process autotune registries as one table — the
+        registry-export shape (replaces ``autotune.dump_registry``).
+        Provenance defaults to the live DSE sweep counters."""
+        if provenance is None:
+            provenance = {"source": "registry",
+                          "sweep_stats": autotune.sweep_stats()}
+        return cls.from_rows(autotune.registry_snapshot(),
+                             autotune.gemm_registry_snapshot(),
+                             provenance=provenance)
 
     def __len__(self) -> int:
         return len(self.conv) + len(self.gemm)
@@ -51,17 +78,19 @@ class PlanTable:
         save→load→save byte-equality contract."""
         return json.dumps({"format": _FORMAT,
                            "conv": list(self.conv),
-                           "gemm": list(self.gemm)},
+                           "gemm": list(self.gemm),
+                           "provenance": self.provenance},
                           sort_keys=True, indent=1) + "\n"
 
     @classmethod
     def from_json(cls, text: str) -> "PlanTable":
         doc = json.loads(text)
-        if doc.get("format") != _FORMAT:
+        if doc.get("format") not in _ACCEPTED_FORMATS:
             raise ValueError(
-                f"plan table format {doc.get('format')!r} != {_FORMAT}; "
-                f"re-save with CompiledCNN.save_plan")
-        return cls.from_rows(doc["conv"], doc["gemm"])
+                f"plan table format {doc.get('format')!r} not in "
+                f"{_ACCEPTED_FORMATS}; re-save with CompiledCNN.save_plan")
+        return cls.from_rows(doc["conv"], doc["gemm"],
+                             provenance=doc.get("provenance", {}))
 
     def save(self, path: str) -> str:
         with open(path, "w") as f:

@@ -73,12 +73,56 @@ import numpy as np
 from repro.core.config import CNNConfig
 from repro.models.cnn import (cnn_forward, cnn_forward_stage,
                               cnn_forward_stage_quant)
+from repro.obs.metrics import MetricsRegistry, record_report
+from repro.obs.trace import (CAT_REQUEST, FLEET_TRACK, TraceRecorder)
 from repro.parallel.pipeline_par import pipeline_forward_stages
 from repro.parallel.sharding import batch_sharding
 from repro.serve.faults import FaultSchedule
 from repro.serve.report import FleetReport, fleet_report
 from repro.serve.router import Completion, Request, Router
 from repro.serve.stage_planner import StagePlan, plan_stages, total_cost
+
+# (counter key, help) for the per-run serve counters; the key doubles as
+# the FleetReport-adjacent name: serve_<key>_total in metric snapshots.
+SERVE_COUNTERS = (
+    ("done", "requests served ok"),
+    ("failed", "retry budget exhausted -> Completion(failed)"),
+    ("rejected", "admission-control rejections"),
+    ("retries", "lost requests re-dispatched against budget"),
+    ("steals", "requests work-stolen across queues"),
+    ("failures", "replica fail events that landed"),
+    ("recoveries", "replicas restored into dispatch"),
+    ("degraded", "rounds served with < replicas alive"),
+    ("swapped", "replicas rolled by hot_swap"),
+    ("scale_up", "replicas the autoscaler spun up"),
+    ("scale_down", "replicas the autoscaler drained out"),
+    ("rounds", "gang rounds / microbatch boundaries"),
+)
+
+
+def _serve_obs(trace, metrics, n_replicas, *, scheduler, clock):
+    """Normalize the (trace, metrics) pair a serve loop records into.
+
+    Always returns live recorder/registry objects (fresh ones when the
+    caller passed None) so the loops instrument unconditionally — the
+    overhead is a few appends per event on the modeled clock, which the
+    benchmark's trace-overhead row asserts is invisible in modeled rows.
+    Tracks are registered up front (fleet first, then each replica) so
+    thread ids never depend on event order.
+    """
+    trace = trace if trace is not None else TraceRecorder()
+    metrics = metrics if metrics is not None else MetricsRegistry()
+    trace.track(FLEET_TRACK)
+    for r in range(n_replicas):
+        trace.track(f"replica {r}")
+    trace.set_meta("scheduler", scheduler)
+    trace.set_meta("clock", clock)
+    ctr = {key: metrics.counter(f"serve_{key}_total", help)
+           for key, help in SERVE_COUNTERS}
+    base = {key: c.value for key, c in ctr.items()}
+    hist = metrics.histogram("request_latency_seconds",
+                             "ok-completion request latency")
+    return trace, metrics, ctr, base, hist
 
 # Modeled artifact-restore cost: a recovering (or hot-swapping) replica
 # reloads params + plan table from the committed artifact before
@@ -491,9 +535,18 @@ class ServeEngine:
     # -- the serving loop --------------------------------------------------
 
     def serve(self, requests: List[Request], *,
-              faults: Optional[FaultSchedule] = None
+              faults: Optional[FaultSchedule] = None,
+              trace: Optional[TraceRecorder] = None,
+              metrics: Optional[MetricsRegistry] = None
               ) -> Tuple[List[Completion], FleetReport]:
         """Drain a request stream; returns (completions, fleet report).
+
+        ``trace``/``metrics`` (see :mod:`repro.obs`) receive the run's
+        typed spans/instants and counter/gauge/histogram streams — pass
+        your own to export them, or leave None (the loop records into
+        throwaway instances; instrumentation is always on and never
+        touches the simulated clock). A registry is per-run: counters
+        reconcile against this run's report.
 
         The discrete-event loop: admit arrivals up to the clock (router
         policy + admission control), gang-drain one padded micro-batch
@@ -520,15 +573,18 @@ class ServeEngine:
         """
         if self.scheduler == "continuous":
             from repro.serve.scheduler import ContinuousScheduler
-            return ContinuousScheduler(self).serve(requests,
-                                                   faults=faults)
+            return ContinuousScheduler(self).serve(requests, faults=faults,
+                                                   trace=trace,
+                                                   metrics=metrics)
         R = self.replicas
+        trace, metrics, ctr, ctr0, hist = _serve_obs(
+            trace, metrics, R, scheduler="gang", clock=self.clock_mode)
         if faults is not None:
             faults.validate_for(R)
         router = self.router
         done: List[Completion] = []
         busy = [0.0] * R
-        clock, rounds = 0.0, 0
+        clock = 0.0
         pending = sorted(requests, key=lambda r: r.t_arrival)
         compiled_vs = set()
 
@@ -541,8 +597,6 @@ class ServeEngine:
         fail_t = {}                     # replica -> time its failure landed
         ttr: List[float] = []
         swapped = set()
-        ctr = {"retries": 0, "failures": 0, "recoveries": 0,
-               "degraded": 0, "swapped": 0}
 
         fault_it = iter(faults) if faults is not None else iter(())
         next_fault = next(fault_it, None)
@@ -576,10 +630,27 @@ class ServeEngine:
                     rid=req.rid, pred=-1, t_arrival=req.t_arrival,
                     t_done=t, replica=-1, status="failed",
                     attempts=a - 1))
+                ctr["failed"].inc()
+                trace.instant("failed", t, cat=CAT_REQUEST,
+                              args={"rid": req.rid, "attempts": a - 1})
                 return
-            ctr["retries"] += 1
+            ctr["retries"].inc()
+            trace.instant("retry", t, cat=CAT_REQUEST,
+                          args={"rid": req.rid, "attempt": a})
             delay = self.backoff * (2 ** (a - 1)) if self.backoff else 0.0
             heapq.heappush(retry_q, (t + delay, next(seq), req))
+
+        def note_dispatch(req, ok, t):
+            # the router decided: enqueue lands on the chosen replica's
+            # track, an admission rejection is a fleet-level instant
+            if ok:
+                trace.instant("enqueue", t, cat=CAT_REQUEST,
+                              track=f"replica {router.last_replica}",
+                              args={"rid": req.rid})
+            else:
+                ctr["rejected"].inc()
+                trace.instant("reject", t, cat=CAT_REQUEST,
+                              args={"rid": req.rid})
 
         def start_next_swap(t):
             sw = self._pending_swap
@@ -590,7 +661,10 @@ class ServeEngine:
                     # its recovery lands — no drain needed
                     version[r] = sw["version"]
                     swapped.add(r)
-                    ctr["swapped"] += 1
+                    ctr["swapped"].inc()
+                    trace.instant("hot_swap", t,
+                                  args={"replica": r,
+                                        "version": sw["version"]})
                     continue
                 up[r] = False
                 for req in router.evacuate(r):
@@ -617,13 +691,17 @@ class ServeEngine:
                 if not up[r]:
                     return              # already down (restoring/swapping)
                 up[r] = False
-                ctr["failures"] += 1
+                ctr["failures"].inc()
+                trace.instant("fail", t_e, args={"replica": r})
                 fail_t[r] = t_e
                 if serving is not None and r not in serving["lost"]:
                     take = serving["take"].get(r) or ()
                     if take:            # the in-flight round is lost
                         serving["lost"].add(r)
                         busy[r] += t_e - serving["t0"]
+                        trace.span("round", serving["t0"], t_e,
+                                   track=f"replica {r}",
+                                   args={"aborted": True})
                         for req in take:
                             readmit(req, t_e)
                 for req in router.evacuate(r):
@@ -634,14 +712,17 @@ class ServeEngine:
                 if sw is not None and sw.get("current") == r:
                     return              # the swap's restore owns r
                 up[r] = True
-                ctr["recoveries"] += 1
+                ctr["recoveries"].inc()
+                trace.instant("recover", t_e, args={"replica": r})
                 if r in fail_t:
                     ttr.append(t_e - fail_t.pop(r))
             elif kind == "swapped":
                 version[r] = sw["version"]
                 up[r] = True
                 swapped.add(r)
-                ctr["swapped"] += 1
+                ctr["swapped"].inc()
+                trace.instant("hot_swap", t_e,
+                              args={"replica": r, "version": sw["version"]})
                 fail_t.pop(r, None)
                 sw["current"] = None
                 start_next_swap(t_e)
@@ -654,10 +735,11 @@ class ServeEngine:
             maybe_start_swap(clock)
             if any(up):
                 while pending and pending[0].t_arrival <= clock:
-                    router.dispatch(pending.pop(0), up)
+                    req = pending.pop(0)
+                    note_dispatch(req, router.dispatch(req, up), clock)
                 while retry_q and retry_q[0][0] <= clock:
                     _, _, req = heapq.heappop(retry_q)
-                    router.dispatch(req, up)
+                    note_dispatch(req, router.dispatch(req, up), clock)
             if not router.backlog():
                 if not pending and not retry_q:
                     break
@@ -679,12 +761,17 @@ class ServeEngine:
                     # dead fleet, no recovery scheduled: fail every
                     # outstanding request explicitly — none stranded
                     for req in pending + [e[2] for e in retry_q]:
+                        t_f = max(clock, req.t_arrival)
                         done.append(Completion(
                             rid=req.rid, pred=-1,
                             t_arrival=req.t_arrival,
-                            t_done=max(clock, req.t_arrival), replica=-1,
+                            t_done=t_f, replica=-1,
                             status="failed",
                             attempts=attempts.get(req.rid, 0)))
+                        ctr["failed"].inc()
+                        trace.instant("failed", t_f, cat=CAT_REQUEST,
+                                      args={"rid": req.rid,
+                                            "dead_fleet": True})
                     pending, retry_q = [], []
                     break
                 clock = max(clock, min(cands))
@@ -720,9 +807,9 @@ class ServeEngine:
                          * cost_mult
                          if self.clock_mode == "modeled" else t_wall)
             t_end = clock + t_service
-            rounds += 1
+            ctr["rounds"].inc()
             if not all(up_at_drain):
-                ctr["degraded"] += 1
+                ctr["degraded"].inc()
             # fault/swap events landing inside (clock, t_end] hit the
             # round in flight: a failing replica's take is lost mid-round
             serving = {"t0": clock, "lost": set(),
@@ -747,11 +834,19 @@ class ServeEngine:
                 if not take:            # idle/down replica this round
                     continue
                 v = version_at_drain[r]
+                trace.span("round", clock, t_end, track=f"replica {r}",
+                           args={"version": v, "n_real": n_real})
                 for req, pred in zip(take, preds_by_v[v][r][:n_real]):
                     done.append(Completion(
                         rid=req.rid, pred=int(pred),
                         t_arrival=req.t_arrival, t_done=t_end, replica=r,
                         version=v, attempts=attempts.get(req.rid, 0)))
+                    ctr["done"].inc()
+                    hist.observe(t_end - req.t_arrival)
+                    trace.span("request", clock, t_end,
+                               track=f"replica {r}", cat=CAT_REQUEST,
+                               args={"rid": req.rid, "version": v,
+                                     "attempts": attempts.get(req.rid, 0)})
             clock = t_end
 
         sw = self._pending_swap
@@ -761,18 +856,28 @@ class ServeEngine:
             for r in range(R):
                 if r not in swapped:
                     swapped.add(r)
-                    ctr["swapped"] += 1
+                    ctr["swapped"].inc()
+                    trace.instant("hot_swap", clock,
+                                  args={"replica": r,
+                                        "version": sw["version"]})
             self._adopt_version(sw["version"])
             self._pending_swap = None
+        # the report reads this run's deltas from the registry — one
+        # source of truth for counters, snapshot and report alike
+        n_of = {k: c.value - ctr0[k] for k, c in ctr.items()}
+        metrics.gauge("fleet_replicas_serving",
+                      "up replicas at run end").set(sum(up))
         rep = fleet_report(
             done, router.rejected, mode=self.mode, replicas=self.replicas,
             pp_stages=self.pp_stages, batch=self.batch,
-            clock=self.clock_mode, rounds=rounds, busy_s=busy,
+            clock=self.clock_mode, rounds=n_of["rounds"], busy_s=busy,
             makespan_s=clock,
             bubble_fraction=(self.stage_plan.bubble(self.n_micro)
                              if self.stage_plan else 0.0),
-            n_retries=ctr["retries"], n_failures=ctr["failures"],
-            n_recoveries=ctr["recoveries"], degraded_rounds=ctr["degraded"],
-            time_to_recover_s=ttr, n_swapped=ctr["swapped"],
+            n_retries=n_of["retries"], n_failures=n_of["failures"],
+            n_recoveries=n_of["recoveries"],
+            degraded_rounds=n_of["degraded"],
+            time_to_recover_s=ttr, n_swapped=n_of["swapped"],
             slo_s=self.slo)
+        record_report(metrics, rep)
         return done, rep

@@ -142,10 +142,14 @@ class FleetReport:
                      if (self.n_scale_up or self.n_scale_down) else "")
             cb = f" | cb: {self.n_steals} steals{occ}{scale}"
         unit = "rounds" if self.scheduler == "gang" else "boundaries"
+        # NaN percentiles (zero completions) render as "n/a" for humans;
+        # to_dict keeps the NaN floats for tooling
+        def ms(v):
+            return "n/a" if math.isnan(v) else f"{v:.1f} ms"
         return (f"[{self.mode}/{self.scheduler}] {self.n_done} served in "
                 f"{self.rounds} {unit} ({self.clock} clock): "
                 f"{self.throughput:.1f} img/s, "
-                f"p50 {self.p50_ms:.1f} ms, p95 {self.p95_ms:.1f} ms"
+                f"p50 {ms(self.p50_ms)}, p95 {ms(self.p95_ms)}"
                 f"{util}{rej}{bub}{slo}{cb}{chaos}{swap}")
 
 

@@ -138,6 +138,7 @@ class Router:
         self.queues = [MicroBatcher(plan_batch) for _ in range(n_replicas)]
         self.max_queue = max_queue
         self.rejected: List[Request] = []
+        self.last_replica = -1         # replica of the latest dispatch (-1 = rejected)
 
     @property
     def n_replicas(self) -> int:
@@ -161,8 +162,10 @@ class Router:
         r = min(cands, key=lambda i: (len(self.queues[i]), i))
         if self.max_queue and len(self.queues[r]) >= self.max_queue:
             self.rejected.append(req)
+            self.last_replica = -1
             return False
         self.queues[r].submit(req)
+        self.last_replica = r
         return True
 
     def evacuate(self, r: int) -> List[Request]:

@@ -48,13 +48,14 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from collections import deque
 from dataclasses import asdict, dataclass
 from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.serve.report import FleetReport, fleet_report, nearest_rank
+from repro.obs.metrics import record_report
+from repro.obs.trace import CAT_REQUEST
+from repro.serve.report import FleetReport, fleet_report
 from repro.serve.router import Completion, Request
 
 
@@ -117,6 +118,7 @@ class _Slot:
     req: Request
     pred: int
     version: int
+    t_admit: float = 0.0               # the request span's start time
 
 
 class ContinuousScheduler:
@@ -133,8 +135,9 @@ class ContinuousScheduler:
 
     # The serve loop is one long discrete-event simulation; splitting it
     # would scatter the closures over (clock, slots, events) state.
-    def serve(self, requests: List[Request], *,
-              faults=None) -> Tuple[List[Completion], FleetReport]:
+    def serve(self, requests: List[Request], *, faults=None,
+              trace=None, metrics=None
+              ) -> Tuple[List[Completion], FleetReport]:
         """Drain a request stream; returns (completions, fleet report).
 
         Same contract as the gang engine's ``serve`` — every admitted
@@ -142,8 +145,12 @@ class ContinuousScheduler:
         rejection, faults/hot-swaps honored — but requests are admitted
         and retired individually at microbatch boundaries, work-stolen
         across queues, and the fleet elastically scales when the engine
-        carries an :class:`AutoscalePolicy`.
+        carries an :class:`AutoscalePolicy`. ``trace``/``metrics`` as in
+        the gang ``serve``; the autoscaler's p95 window and load gauge
+        live in the registry (``request_latency_window`` /
+        ``fleet_load``) — the exported signals ARE the decision inputs.
         """
+        from repro.serve.engine import _serve_obs
         eng = self.engine
         R0 = eng.replicas
         B = eng.batch
@@ -152,11 +159,13 @@ class ContinuousScheduler:
         nq = router.n_replicas         # max_replicas queues when elastic
         if faults is not None:
             faults.validate_for(R0)
+        trace, metrics, ctr, ctr0, hist = _serve_obs(
+            trace, metrics, nq, scheduler="continuous",
+            clock=eng.clock_mode)
 
         done: List[Completion] = []
         pending = sorted(requests, key=lambda r: r.t_arrival)
         clock = 0.0
-        boundaries = 0
         seq = itertools.count()
 
         # -- per-replica state ------------------------------------------
@@ -177,13 +186,21 @@ class ContinuousScheduler:
         fail_t = {}
         ttr: List[float] = []
         swapped = set()
-        lat_window: deque = deque(maxlen=policy.window if policy else 64)
+        # the autoscaler's p95 signal lives in the registry — one source
+        # of truth for the decision input and the exported stream
+        lat_window = metrics.window("request_latency_window",
+                                    size=policy.window if policy else 64,
+                                    help="recent ok-completion latencies "
+                                         "(the autoscaler's p95 window)")
+        g_load = metrics.gauge("fleet_load",
+                               "(filled slots + backlog) / capacity")
+        g_p95w = metrics.gauge("fleet_p95_window_s",
+                               "windowed p95 latency the autoscaler reads")
+        g_srv = metrics.gauge("fleet_replicas_serving",
+                              "replicas accepting dispatch")
         scale_events: List[dict] = []
         last_scale_t = float("-inf")
         next_eval = policy.interval if policy else float("inf")
-        ctr = {"retries": 0, "failures": 0, "recoveries": 0,
-               "degraded": 0, "swapped": 0, "steals": 0,
-               "scale_up": 0, "scale_down": 0}
 
         # occupancy/busy integrals: occ_int is filled-slot-seconds,
         # busy is seconds with >= 1 filled slot
@@ -233,10 +250,25 @@ class ContinuousScheduler:
                     rid=req.rid, pred=-1, t_arrival=req.t_arrival,
                     t_done=t, replica=-1, status="failed",
                     attempts=a - 1))
+                ctr["failed"].inc()
+                trace.instant("failed", t, cat=CAT_REQUEST,
+                              args={"rid": req.rid, "attempts": a - 1})
                 return
-            ctr["retries"] += 1
+            ctr["retries"].inc()
+            trace.instant("retry", t, cat=CAT_REQUEST,
+                          args={"rid": req.rid, "attempt": a})
             delay = eng.backoff * (2 ** (a - 1)) if eng.backoff else 0.0
             heapq.heappush(retry_q, (t + delay, next(seq), req))
+
+        def note_dispatch(req, ok, t):
+            if ok:
+                trace.instant("enqueue", t, cat=CAT_REQUEST,
+                              track=f"replica {router.last_replica}",
+                              args={"rid": req.rid})
+            else:
+                ctr["rejected"].inc()
+                trace.instant("reject", t, cat=CAT_REQUEST,
+                              args={"rid": req.rid})
 
         def t_bound(r):
             # boundary cadence: one slot-fill opportunity per microbatch
@@ -279,7 +311,10 @@ class ContinuousScheduler:
                     # its recovery lands — no drain needed
                     version[r] = sw["version"]
                     swapped.add(r)
-                    ctr["swapped"] += 1
+                    ctr["swapped"].inc()
+                    trace.instant("hot_swap", t,
+                                  args={"replica": r,
+                                        "version": sw["version"]})
                     continue
                 draining[r] = True
                 drain_kind[r] = "swap"
@@ -326,7 +361,9 @@ class ContinuousScheduler:
             last_t[r] = t
             t_up = t + eng._versions[version[r]]["t_restore"]
             heapq.heappush(events, (t_up, next(seq), "scaleup", r, -1))
-            ctr["scale_up"] += 1
+            ctr["scale_up"].inc()
+            trace.instant("scale_up", t,
+                          args={"replica": r, "reason": reason})
             scale_events.append(asdict(ScaleEvent(
                 t=t, kind="up", replica=r, reason=reason)))
             return True
@@ -347,7 +384,9 @@ class ContinuousScheduler:
             drain_kind[r] = "scale"
             for req in router.evacuate(r):
                 readmit(req, t, charge=False)
-            ctr["scale_down"] += 1
+            ctr["scale_down"].inc()
+            trace.instant("scale_down", t,
+                          args={"replica": r, "reason": reason})
             scale_events.append(asdict(ScaleEvent(
                 t=t, kind="down", replica=r, reason=reason)))
             if not slots[r]:
@@ -363,10 +402,14 @@ class ContinuousScheduler:
                          if active[r] and not draining[r]]
             load = sum(len(slots[r]) for r in srv) + router.backlog()
             cap = len(srv) * B
-            util = (load / cap) if cap else \
-                (float("inf") if load else 0.0)
-            p95w = (nearest_rank(sorted(lat_window), 0.95)
-                    if lat_window else 0.0)
+            # the decision signals pass through the registry: write the
+            # gauges, then read THEM — the exported stream is the input
+            g_srv.set(len(srv))
+            g_load.set((load / cap) if cap else
+                       (float("inf") if load else 0.0))
+            g_p95w.set(lat_window.percentile(0.95))
+            util = g_load.value
+            p95w = g_p95w.value
             slo_bad = eng.slo > 0 and p95w > eng.slo
             if t - last_scale_t < policy.cooldown:
                 return
@@ -385,14 +428,13 @@ class ContinuousScheduler:
 
         # -- the boundary: retire -> drain-check -> fill -> steal -------
         def on_boundary(r, t, g):
-            nonlocal boundaries
             if g != gen[r] or not active[r] or not up[r]:
                 return                  # stale: superseded by fail/drain
             armed[r] = False
-            boundaries += 1
+            ctr["rounds"].inc()
             if any(active[i] and not up[i] and i not in starting
                    for i in range(nq)):
-                ctr["degraded"] += 1
+                ctr["degraded"].inc()
             eps = 1e-9 * max(t, 1.0)
             due = [s for s in slots[r] if s.t_ready <= t + eps]
             if due:
@@ -404,7 +446,15 @@ class ContinuousScheduler:
                         t_arrival=s.req.t_arrival, t_done=t, replica=r,
                         version=s.version,
                         attempts=attempts.get(s.req.rid, 0)))
-                    lat_window.append(t - s.req.t_arrival)
+                    ctr["done"].inc()
+                    hist.observe(t - s.req.t_arrival)
+                    lat_window.observe(t - s.req.t_arrival)
+                    trace.span("request", s.t_admit, t,
+                               track=f"replica {r}", cat=CAT_REQUEST,
+                               args={"rid": s.req.rid,
+                                     "version": s.version,
+                                     "attempts": attempts.get(
+                                         s.req.rid, 0)})
             if draining[r] and not slots[r]:
                 if drain_kind[r] == "swap":
                     finish_swap_drain(r, t)
@@ -420,7 +470,8 @@ class ContinuousScheduler:
                     tr = eng._versions[version[r]]["t_round"]
                     for req, p in zip(take, preds):
                         slots[r].append(
-                            _Slot(t + req.cost * tr, req, p, version[r]))
+                            _Slot(t + req.cost * tr, req, p, version[r],
+                                  t_admit=t))
                 if eng.steal_threshold > 0:
                     donors = [d for d in serving_ids() if d != r]
                     if donors:
@@ -438,7 +489,12 @@ class ContinuousScheduler:
                                     no_steal_until[r] = t + t_bound(r)
                                 else:
                                     attempts[req.rid] = a
-                                    ctr["steals"] += 1
+                                    ctr["steals"].inc()
+                                    trace.instant(
+                                        "steal", t, track=f"replica {r}",
+                                        cat=CAT_REQUEST,
+                                        args={"rid": req.rid, "from": d,
+                                              "to": r})
                                     router.queues[r].submit(req)
             if slots[r] or len(router.queues[r]):
                 armed[r] = True
@@ -454,7 +510,8 @@ class ContinuousScheduler:
                     return              # already down
                 tick(r, t)
                 up[r] = False
-                ctr["failures"] += 1
+                ctr["failures"].inc()
+                trace.instant("fail", t, args={"replica": r})
                 fail_t[r] = t
                 gen[r] += 1
                 armed[r] = False
@@ -468,7 +525,10 @@ class ContinuousScheduler:
                     # the dying replica restores from the NEW artifact
                     version[r] = sw["version"]
                     swapped.add(r)
-                    ctr["swapped"] += 1
+                    ctr["swapped"].inc()
+                    trace.instant("hot_swap", t,
+                                  args={"replica": r,
+                                        "version": sw["version"]})
                     draining[r] = False
                     drain_kind[r] = None
                     sw["current"] = None
@@ -485,7 +545,8 @@ class ContinuousScheduler:
                 up[r] = True
                 gen[r] += 1
                 last_t[r] = t
-                ctr["recoveries"] += 1
+                ctr["recoveries"].inc()
+                trace.instant("recover", t, args={"replica": r})
                 if r in fail_t:
                     ttr.append(t - fail_t.pop(r))
             elif kind == "scaleup":
@@ -505,7 +566,9 @@ class ContinuousScheduler:
                 draining[r] = False
                 drain_kind[r] = None
                 swapped.add(r)
-                ctr["swapped"] += 1
+                ctr["swapped"].inc()
+                trace.instant("hot_swap", t,
+                              args={"replica": r, "version": sw["version"]})
                 fail_t.pop(r, None)
                 sw["current"] = None
                 start_next_swap(t)
@@ -531,12 +594,15 @@ class ContinuousScheduler:
                         for i in range(nq)]
                 if any(mask):
                     if pending and pending[0].t_arrival <= clock:
-                        router.dispatch(pending.pop(0), mask)
+                        req = pending.pop(0)
+                        note_dispatch(req, router.dispatch(req, mask),
+                                      clock)
                         moved = True
                         continue
                     if retry_q and retry_q[0][0] <= clock:
                         _, _, req = heapq.heappop(retry_q)
-                        router.dispatch(req, mask)
+                        note_dispatch(req, router.dispatch(req, mask),
+                                      clock)
                         moved = True
                         continue
                 # arm a boundary wherever there is queued work — or an
@@ -584,11 +650,16 @@ class ContinuousScheduler:
                 # dead fleet, no recovery, no elasticity left: fail
                 # every outstanding request explicitly — none stranded
                 for req in pending + [e[2] for e in retry_q]:
+                    t_f = max(clock, req.t_arrival)
                     done.append(Completion(
                         rid=req.rid, pred=-1, t_arrival=req.t_arrival,
-                        t_done=max(clock, req.t_arrival), replica=-1,
+                        t_done=t_f, replica=-1,
                         status="failed",
                         attempts=attempts.get(req.rid, 0)))
+                    ctr["failed"].inc()
+                    trace.instant("failed", t_f, cat=CAT_REQUEST,
+                                  args={"rid": req.rid,
+                                        "dead_fleet": True})
                 pending, retry_q = [], []
                 break
             clock = max(clock, min(cands))
@@ -602,24 +673,32 @@ class ContinuousScheduler:
             for r in range(nq):
                 if active[r] and r not in swapped:
                     swapped.add(r)
-                    ctr["swapped"] += 1
+                    ctr["swapped"].inc()
+                    trace.instant("hot_swap", clock,
+                                  args={"replica": r,
+                                        "version": sw["version"]})
             eng._adopt_version(sw["version"])
             eng._pending_swap = None
         makespan = clock
         occupancy = [occ_int[r] / (makespan * B) if makespan > 0 else 0.0
                      for r in range(nq)]
+        # the report reads this run's deltas from the registry — the
+        # same counters the metrics snapshot exports
+        n_of = {k: c.value - ctr0[k] for k, c in ctr.items()}
+        g_srv.set(sum(active))
         rep = fleet_report(
             done, router.rejected, mode=eng.mode, replicas=R0,
             pp_stages=eng.pp_stages, batch=B, clock=eng.clock_mode,
-            rounds=boundaries, busy_s=busy, makespan_s=makespan,
+            rounds=n_of["rounds"], busy_s=busy, makespan_s=makespan,
             bubble_fraction=(eng.stage_plan.bubble(eng.n_micro)
                              if eng.stage_plan else 0.0),
-            n_retries=ctr["retries"], n_failures=ctr["failures"],
-            n_recoveries=ctr["recoveries"],
-            degraded_rounds=ctr["degraded"], time_to_recover_s=ttr,
-            n_swapped=ctr["swapped"], slo_s=eng.slo,
+            n_retries=n_of["retries"], n_failures=n_of["failures"],
+            n_recoveries=n_of["recoveries"],
+            degraded_rounds=n_of["degraded"], time_to_recover_s=ttr,
+            n_swapped=n_of["swapped"], slo_s=eng.slo,
             scheduler="continuous", occupancy=occupancy,
-            n_steals=ctr["steals"], n_scale_up=ctr["scale_up"],
-            n_scale_down=ctr["scale_down"], scale_events=scale_events,
+            n_steals=n_of["steals"], n_scale_up=n_of["scale_up"],
+            n_scale_down=n_of["scale_down"], scale_events=scale_events,
             replicas_final=sum(active))
+        record_report(metrics, rep)
         return done, rep

@@ -29,6 +29,24 @@ PIPELINE_SURFACE = {
     "spec_from_config",
 }
 
+OBS_SURFACE = {
+    "TraceRecorder",
+    "CAT_REQUEST",
+    "CAT_ROUND",
+    "CAT_FLEET",
+    "FLEET_TRACK",
+    "MetricsRegistry",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "WindowSeries",
+    "DEFAULT_LATENCY_BUCKETS",
+    "record_report",
+    "validate_trace",
+    "validate_metrics",
+    "reconcile",
+}
+
 OPS_SURFACE = {
     "attention",
     "fc",
@@ -54,10 +72,18 @@ def test_ops_exports_exactly_the_contract():
         assert hasattr(ops, name), f"repro.kernels.ops.{name} missing"
 
 
+def test_obs_exports_exactly_the_contract():
+    import repro.obs as obs
+    assert set(obs.__all__) == OBS_SURFACE
+    for name in OBS_SURFACE:
+        assert hasattr(obs, name), f"repro.obs.{name} missing"
+
+
 def test_compiled_cnn_runtime_surface():
     """The CompiledCNN method contract of the compile-once API."""
     for method in ("forward", "forward_stage", "serve", "plans",
-                   "save_plan", "load_plan", "save", "load"):
+                   "save_plan", "load_plan", "save", "load",
+                   "roofline_breakdown"):
         assert callable(getattr(pipeline.CompiledCNN, method, None)), \
             f"CompiledCNN.{method} missing"
 

@@ -1,0 +1,392 @@
+"""Observability subsystem tests (PR 8): the trace recorder, the
+metrics registry, trace <-> metrics <-> FleetReport reconciliation on a
+fault-injected autoscaled fleet, plan provenance, and the CLI surface.
+
+The load-bearing contract: the serve loops increment ONE set of
+counters, and the trace, the metrics snapshot and the FleetReport are
+three views of it — so ``repro.obs.reconcile`` can demand exact
+equality, not statistical agreement.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.obs import (DEFAULT_LATENCY_BUCKETS, MetricsRegistry,
+                       TraceRecorder, reconcile, validate_metrics,
+                       validate_trace)
+from repro.serve import (AutoscalePolicy, FaultSchedule, Request,
+                         ServeEngine, total_cost)
+from repro.serve.report import fleet_report, nearest_rank
+
+
+# ---------------------------------------------------------------------------
+# trace recorder
+# ---------------------------------------------------------------------------
+
+def test_trace_recorder_chrome_shape_and_track_tids():
+    tr = TraceRecorder()
+    tr.track("fleet")
+    tr.track("replica 0")
+    tr.span("round", 0.001, 0.002, track="replica 0")
+    tr.instant("fail", 0.0015, args={"replica": 0})
+    doc = json.loads(tr.to_json())
+    assert set(doc) == {"traceEvents", "displayTimeUnit", "otherData"}
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    # one process_name + one thread_name per registered track
+    assert [e["name"] for e in meta] == ["process_name", "thread_name",
+                                        "thread_name"]
+    names = {e["args"]["name"]: e["tid"] for e in meta
+             if e["name"] == "thread_name"}
+    assert names == {"fleet": 0, "replica 0": 1}   # registration order
+    span = next(e for e in evs if e["ph"] == "X")
+    assert (span["ts"], span["dur"]) == (1000.0, 1000.0)   # us
+    inst = next(e for e in evs if e["ph"] == "i")
+    assert inst["s"] == "t" and inst["args"] == {"replica": 0}
+    assert validate_trace(doc) == []
+
+
+def test_trace_recorder_sorted_and_byte_deterministic(tmp_path):
+    def build():
+        tr = TraceRecorder()
+        tr.track("a")
+        tr.track("b")
+        tr.span("late", 0.005, 0.006, track="b")
+        tr.span("early", 0.001, 0.004, track="a")
+        tr.instant("mid", 0.002)
+        tr.set_meta("k", "v")
+        return tr
+    a, b = build(), build()
+    assert a.to_json() == b.to_json()
+    body = [e for e in json.loads(a.to_json())["traceEvents"]
+            if e["ph"] != "M"]
+    assert [e["name"] for e in body] == ["early", "mid", "late"]
+    assert "seq" not in body[0]
+    p = tmp_path / "t.json"
+    a.save(p)
+    assert p.read_text() == a.to_json()
+    assert json.loads(a.to_json())["otherData"] == {"k": "v"}
+
+
+def test_validate_trace_catches_malformed_docs():
+    assert validate_trace({"traceEvents": "nope"})
+    bad_span = {"traceEvents": [
+        {"name": "s", "ph": "X", "pid": 1, "tid": 0, "ts": 3.0,
+         "dur": -1.0, "cat": "c"}]}
+    assert any("dur" in e for e in validate_trace(bad_span))
+    # per-track ts monotonicity in file order
+    tr = TraceRecorder()
+    tr.instant("b", 0.002)
+    tr.instant("a", 0.001)
+    doc = json.loads(tr.to_json())          # export re-sorts: valid
+    assert validate_trace(doc) == []
+    doc["traceEvents"].reverse()            # meta now trails: still fine,
+    ev = [e for e in doc["traceEvents"] if e["ph"] != "M"]
+    assert ev[0]["ts"] > ev[1]["ts"]        # but instants are out of order
+    assert any("monotone" in e for e in validate_trace(doc))
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_metrics_counters_gauges_idempotent_registration():
+    m = MetricsRegistry()
+    c = m.counter("serve_done_total", "done")
+    c.inc()
+    c.inc(2)
+    assert m.counter("serve_done_total", "done") is c   # same object
+    assert m.value("serve_done_total") == 3
+    g = m.gauge("fleet_load", "load")
+    g.set(0.75)
+    assert m.value("fleet_load") == 0.75
+    with pytest.raises(ValueError):
+        m.gauge("serve_done_total", "name collision across kinds")
+
+
+def test_histogram_percentile_within_one_bucket():
+    m = MetricsRegistry()
+    h = m.histogram("request_latency_seconds", "lat")
+    lats = [0.0004 * (i + 1) for i in range(100)]
+    for v in lats:
+        h.observe(v)
+    for q in (0.5, 0.95):
+        lo, hi = h.percentile_bounds(q)
+        exact = nearest_rank(sorted(lats), q)
+        assert lo < exact <= hi            # (lo, hi] bucket contract
+        assert hi <= 2 * exact             # factor-2 buckets: one bucket off
+    assert h.percentile_bounds(0.5)[1] == h.percentile(0.5)
+
+
+def test_window_series_percentile_is_nearest_rank():
+    m = MetricsRegistry()
+    w = m.window("lat_window", size=8, help="w")
+    xs = [5.0, 1.0, 3.0, 2.0, 9.0, 4.0, 8.0, 7.0, 6.0]   # 5.0 evicted
+    for v in xs:
+        w.observe(v)
+    assert len(w) == 8
+    assert w.percentile(0.95) == nearest_rank(sorted(xs[1:]), 0.95)
+    assert m.window("empty", size=4, help="e").percentile(0.95) == 0.0
+
+
+def test_metrics_snapshot_json_and_prometheus(tmp_path):
+    m = MetricsRegistry()
+    m.counter("serve_done_total", "requests served ok").inc(5)
+    m.gauge("fleet_load", "fleet load").set(0.5)
+    h = m.histogram("request_latency_seconds", "latency")
+    h.observe(0.003)
+    snap = json.loads(m.to_json())
+    assert validate_metrics(snap) == []
+    assert snap["counters"]["serve_done_total"] == 5
+    hs = snap["histograms"]["request_latency_seconds"]
+    assert hs["buckets"] == list(DEFAULT_LATENCY_BUCKETS)
+    assert len(hs["counts"]) == len(hs["buckets"]) + 1
+    assert sum(hs["counts"]) == hs["count"] == 1
+    prom = m.to_prometheus()
+    assert "# TYPE serve_done_total counter" in prom
+    assert "serve_done_total 5" in prom
+    assert 'le="+Inf"' in prom and "request_latency_seconds_sum" in prom
+    m.save(tmp_path / "m.prom")
+    assert (tmp_path / "m.prom").read_text() == prom
+    m.save(tmp_path / "m.json")
+    assert json.loads((tmp_path / "m.json").read_text()) == snap
+
+
+def test_nearest_rank_exhaustive_vs_numpy_inverted_cdf():
+    """Deterministic version of the hypothesis property (which skips
+    when hypothesis is absent): nearest-rank == numpy inverted_cdf for
+    every n in 1..200 and the report's quantiles."""
+    for n in range(1, 201):
+        xs = sorted(np.random.default_rng(n).exponential(1.0, n).tolist())
+        for q in (0.5, 0.9, 0.95, 0.99):
+            assert nearest_rank(xs, q) == pytest.approx(float(
+                np.percentile(xs, q * 100, method="inverted_cdf"))), (n, q)
+
+
+# ---------------------------------------------------------------------------
+# report rendering (satellite: n/a instead of nan)
+# ---------------------------------------------------------------------------
+
+def test_fleet_report_summary_renders_na_for_zero_completions():
+    rep = fleet_report([], [], mode="dp", replicas=2, pp_stages=1,
+                       batch=8, clock="modeled", rounds=0,
+                       busy_s=[0.0, 0.0], makespan_s=0.0)
+    assert math.isnan(rep.p50_ms) and math.isnan(rep.p95_ms)
+    s = rep.summary()
+    assert "p50 n/a, p95 n/a" in s and "nan" not in s
+    # ...but the machine-readable dict keeps the NaN floats
+    d = rep.to_dict()
+    assert math.isnan(d["p50_ms"]) and math.isnan(d["p95_ms"])
+
+
+# ---------------------------------------------------------------------------
+# the one-set-of-books contract: chaos + autoscale fleet reconciliation
+# ---------------------------------------------------------------------------
+
+def _chaos_autoscale_run():
+    """Fault-injected autoscaled continuous-batching run, 3 -> up to 8
+    replicas on the modeled clock (no devices; roofline-priced slots)."""
+    cfg = get_config("alexnet")
+    batch = 8
+    t_round = total_cost(cfg, batch)
+    rng = np.random.default_rng(0)
+    rate = 3.0 * 3 * batch / t_round            # 3x the 3-replica capacity
+    t_arr = np.cumsum(rng.exponential(1.0 / rate, 160))
+    reqs = [Request(rid=i, image=np.zeros((1, 1, 1), np.float32),
+                    t_arrival=float(t_arr[i]),
+                    cost=4.0 if i % 17 == 16 else 1.0) for i in range(160)]
+    policy = AutoscalePolicy(min_replicas=3, max_replicas=8,
+                             interval=t_round)
+    faults = FaultSchedule.mtbf(40 * t_round, 4 * t_round, 3, seed=2)
+    eng = ServeEngine(cfg, [], batch=batch, replicas=3, clock="modeled",
+                      execute=False, retries=2, scheduler="continuous",
+                      steal_threshold=2, autoscale=policy)
+    trace, metrics = TraceRecorder(), MetricsRegistry()
+    done, rep = eng.serve(reqs, faults=faults, trace=trace,
+                          metrics=metrics)
+    return done, rep, trace, metrics
+
+
+def test_chaos_autoscale_trace_reconciles_and_is_deterministic():
+    done, rep, trace, metrics = _chaos_autoscale_run()
+    # the run must actually exercise the taxonomy
+    assert rep.n_failures and rep.n_retries and rep.n_scale_up
+    assert rep.n_steals and rep.n_done
+    tdoc = json.loads(trace.to_json())
+    mdoc = json.loads(metrics.to_json())
+    assert validate_trace(tdoc) == []
+    assert validate_metrics(mdoc) == []
+    # exact reconciliation: spans == n_done, steal/retry/fail/recover/
+    # scale instants == report counters, metrics counters == report
+    assert reconcile(rep.to_dict(), trace=tdoc, metrics=mdoc) == []
+    # byte-determinism on the modeled clock
+    done2, rep2, trace2, metrics2 = _chaos_autoscale_run()
+    assert trace2.to_json() == trace.to_json()
+    assert metrics2.to_json() == metrics.to_json()
+    assert rep2.to_dict() == rep.to_dict()
+
+
+def test_chaos_autoscale_percentiles_within_one_histogram_bucket():
+    _, rep, _, metrics = _chaos_autoscale_run()
+    h = metrics.histograms["request_latency_seconds"]
+    for q, ms in ((0.5, rep.p50_ms), (0.95, rep.p95_ms)):
+        lo, hi = h.percentile_bounds(q)
+        assert lo - 1e-12 <= ms / 1e3 <= hi + 1e-12
+
+
+def test_instrumentation_does_not_perturb_the_modeled_run():
+    """Tracing overhead on modeled rows is exactly zero: serve with and
+    without recorders produces identical reports."""
+    cfg = get_config("alexnet")
+    reqs = [Request(rid=i, image=np.zeros((1, 1, 1), np.float32),
+                    t_arrival=0.0) for i in range(24)]
+    def run(**obs):
+        eng = ServeEngine(cfg, [], batch=8, replicas=2, clock="modeled",
+                          execute=False, scheduler="continuous")
+        _, rep = eng.serve(list(reqs), **obs)
+        return rep
+    bare = run()
+    traced = run(trace=TraceRecorder(), metrics=MetricsRegistry())
+    assert traced.to_dict() == bare.to_dict()
+
+
+def test_gang_engine_trace_reconciles():
+    """The gang path feeds the same books as continuous batching."""
+    cfg = get_config("alexnet")
+    t_round = total_cost(cfg, 8)
+    faults = FaultSchedule.at(t_round * 0.5, t_round * 2.5, replica=0)
+    reqs = [Request(rid=i, image=np.zeros((1, 1, 1), np.float32),
+                    t_arrival=0.0) for i in range(48)]
+    eng = ServeEngine(cfg, [], batch=8, replicas=4, clock="modeled",
+                      execute=False, retries=2)
+    trace, metrics = TraceRecorder(), MetricsRegistry()
+    done, rep = eng.serve(reqs, faults=faults, trace=trace,
+                          metrics=metrics)
+    assert rep.n_failures == 1 and rep.n_retries > 0
+    tdoc, mdoc = json.loads(trace.to_json()), json.loads(metrics.to_json())
+    assert validate_trace(tdoc) == []
+    assert reconcile(rep.to_dict(), trace=tdoc, metrics=mdoc) == []
+
+
+def test_observe_fleet_example_artifacts_validate(tmp_path):
+    """The shipped example produces schema-valid, reconciling artifacts."""
+    import importlib.util
+    from pathlib import Path
+    spec = importlib.util.spec_from_file_location(
+        "observe_fleet",
+        Path(__file__).resolve().parents[1] / "examples/observe_fleet.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    out = tmp_path / "obs"
+    mod.run(out)                            # run() asserts reconciliation
+    tdoc = json.loads((out / "trace.json").read_text())
+    mdoc = json.loads((out / "metrics.json").read_text())
+    rdoc = json.loads((out / "report.json").read_text())
+    assert validate_trace(tdoc) == []
+    assert validate_metrics(mdoc) == []
+    assert reconcile(rdoc, trace=tdoc, metrics=mdoc) == []
+    assert (out / "metrics.prom").read_text().startswith("# HELP")
+
+
+# ---------------------------------------------------------------------------
+# plan provenance + registry-export consolidation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_plan_table_provenance_roundtrips_but_not_compared(tmp_path):
+    from repro.pipeline import PlanTable
+    a = PlanTable.from_rows([], [], provenance={"source": "test"})
+    b = PlanTable.from_rows([], [])
+    assert a == b                           # provenance excluded from eq
+    p = tmp_path / "plans.json"
+    a.save(p)
+    loaded = PlanTable.load(p)
+    assert loaded.provenance == {"source": "test"}
+    assert loaded.to_json() == a.to_json()  # byte round trip
+
+
+def test_compile_records_sweep_provenance_and_seeded_inherits():
+    import jax
+    from repro.kernels import autotune
+    from repro.models.cnn import init_cnn_params
+    from repro.pipeline import ExecutionSpec, Serving, compile_cnn
+    cfg = get_config("alexnet").smoke()
+    spec = ExecutionSpec(serving=Serving(batch=4, clock="modeled"))
+    params = init_cnn_params(jax.random.key(0), cfg)
+    autotune.clear_registry()
+    autotune.reset_sweep_stats()
+    cold = compile_cnn(cfg, spec, params, with_engine=False)
+    prov = cold.plan_table.provenance
+    assert prov["sweep_stats"]["conv_sweeps"] > 0
+    assert prov["lookups"]["conv"] > 0
+    # a compile seeded from the table inherits its provenance verbatim
+    # (the artifact save -> load -> save byte-stability contract)
+    warm = compile_cnn(cfg, spec, params, plans=cold.plan_table,
+                       with_engine=False)
+    assert warm.plan_table.provenance == prov
+    assert warm.plan_table.to_json() == cold.plan_table.to_json()
+
+
+def test_dump_registry_is_a_deprecated_plan_table_export(tmp_path):
+    from repro.kernels import autotune
+    from repro.pipeline import PlanTable
+    s = autotune.ConvShape(h=8, w=8, c=4, kh=3, kw=3, m=8, pad=1)
+    autotune.get_plan(s, vmem_budget=256 * 1024)
+    p = tmp_path / "reg.json"
+    with pytest.warns(DeprecationWarning, match="from_registry"):
+        autotune.dump_registry(p)
+    tbl = PlanTable.load(p)                 # ONE registry-export shape
+    assert tbl == PlanTable.from_registry()
+    assert tbl.provenance["source"] == "registry"
+    assert len(tbl) >= 1
+
+
+def test_roofline_breakdown_covers_every_group():
+    import jax
+    from repro.models.cnn import init_cnn_params
+    from repro.pipeline import ExecutionSpec, Serving, compile_cnn
+    cfg = get_config("alexnet").smoke()
+    spec = ExecutionSpec(serving=Serving(batch=4, clock="modeled"))
+    params = init_cnn_params(jax.random.key(0), cfg)
+    compiled = compile_cnn(cfg, spec, params, with_engine=False)
+    rows = compiled.roofline_breakdown()
+    # one row per pipeline group, in network order (5 conv + 3 fc for
+    # alexnet), priced by the same cost model the plans were tuned on
+    kinds = [row["kind"] for row in rows]
+    assert kinds == ["conv"] * 5 + ["gemm"] * 3
+    firsts = [row["group"][0] for row in rows]
+    assert firsts == sorted(firsts)                         # network order
+    for row in rows:
+        assert row["group"] and row["plan"]
+        assert row["t_compute"] > 0 and row["t_memory"] > 0
+        assert row["t_model"] == max(row["t_compute"], row["t_memory"])
+        assert row["bound"] == ("compute" if row["t_compute"]
+                                >= row["t_memory"] else "memory")
+    # breakdown is what a trace embeds: JSON-serialisable as-is
+    json.dumps(rows)
+
+
+# ---------------------------------------------------------------------------
+# CLI surface (satellite: --report-json, plus --trace-out/--metrics-out)
+# ---------------------------------------------------------------------------
+
+def test_serve_cnn_cli_writes_obs_artifacts(tmp_path, monkeypatch, capsys):
+    from repro.launch import serve_cnn
+    t, m, r = (tmp_path / "t.json", tmp_path / "m.json",
+               tmp_path / "r.json")
+    monkeypatch.setattr("sys.argv", [
+        "serve_cnn", "--arch", "alexnet", "--smoke", "--batch", "2",
+        "--requests", "5", "--clock", "modeled", "--no-pallas",
+        "--trace-out", str(t), "--metrics-out", str(m),
+        "--report-json", str(r)])
+    serve_cnn.main()
+    out = capsys.readouterr().out
+    assert "[serve_cnn] OK" in out and "trace:" in out
+    tdoc, mdoc = json.loads(t.read_text()), json.loads(m.read_text())
+    rdoc = json.loads(r.read_text())
+    assert validate_trace(tdoc) == []
+    assert validate_metrics(mdoc) == []
+    assert reconcile(rdoc, trace=tdoc, metrics=mdoc) == []
+    assert rdoc["n_done"] == 5

@@ -133,7 +133,7 @@ def test_plan_table_json_roundtrip_byte_equality():
     assert load_plan(path).to_json() == text
     assert open(path).read() == text
     doc = json.loads(text)
-    assert set(doc) == {"format", "conv", "gemm"}
+    assert set(doc) == {"format", "conv", "gemm", "provenance"}
 
 
 def test_load_plan_skips_dse_sweep():

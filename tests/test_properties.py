@@ -101,6 +101,34 @@ def test_compression_error_feedback_bounded(n, seed):
 
 
 @settings(**SETTINGS)
+@given(st.integers(1, 200), st.sampled_from([0.5, 0.9, 0.95, 0.99]),
+       st.integers(0, 10_000))
+def test_nearest_rank_matches_numpy_inverted_cdf(n, q, seed):
+    """The report's nearest-rank percentile IS numpy's ``inverted_cdf``
+    method (the classical nearest-rank definition) on sorted input."""
+    from repro.serve.report import nearest_rank
+    xs = sorted(np.random.default_rng(seed).exponential(1.0, n).tolist())
+    assert nearest_rank(xs, q) == pytest.approx(
+        float(np.percentile(xs, q * 100, method="inverted_cdf")))
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 200), st.sampled_from([0.5, 0.9, 0.95, 0.99]),
+       st.integers(0, 10_000))
+def test_nearest_rank_sorted_input_contract(n, q, seed):
+    """nearest_rank indexes by rank, so it REQUIRES sorted input: the
+    result is always a sample, monotone in q, and equals the max at
+    q=1.0 — and shuffling the input changes which sample is picked, so
+    callers must sort first (the documented contract)."""
+    from repro.serve.report import nearest_rank
+    xs = sorted(np.random.default_rng(seed).exponential(1.0, n).tolist())
+    v = nearest_rank(xs, q)
+    assert v in xs
+    assert v <= nearest_rank(xs, 1.0) == xs[-1]
+    assert nearest_rank(xs, 0.0) == xs[0]
+
+
+@settings(**SETTINGS)
 @given(st.integers(8, 2048), st.integers(2, 64), st.integers(1, 4))
 def test_expert_capacity_covers_expected_load(T, E, K):
     from repro.core.config import ModelConfig
