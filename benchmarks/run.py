@@ -13,6 +13,11 @@ compile phase is tracked too (PR 5): ``{arch}_compile_sweeps_model``
 gates the deterministic DSE sweep count of a cold
 ``repro.pipeline.compile_cnn``, and the warm-recompile row must be
 sweep-free (enforced every run, like the int8/fleet invariants).
+The measured-plan loop is tracked as well (PR 9): the
+``measured_vs_modeled(arch)`` row records per-plan drift between the
+analytic roofline and the profiler's wall clock, and its provenance
+invariants (full coverage, zero seeded re-measurement, byte-identical
+seeded tables) are enforced every run.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--fast]
                                              [--check-against BENCH_conv.json]
@@ -415,6 +420,81 @@ def compile_bench(fast: bool) -> dict:
     return rows
 
 
+def drift_bench(fast: bool) -> dict:
+    """Measured-plan drift rows (PR 9): close the model->hardware loop.
+
+    One measured cold compile of the AlexNet smoke config (interpret-mode
+    Pallas, cheap trimmed-mean harness) exercises the whole loop:
+    profiler -> format-3 plan table -> drift report. Wall clock and
+    interpret-mode ratios quantify the HARNESS, not the TPU (the backend
+    fingerprint recorded in the row says which), so neither row is
+    numerically gated — but three boolean invariants ARE enforced by
+    main() on every run, like the int8/fleet ones:
+
+    * ``drift_provenance_ok`` — every plan got a measurement, the table
+      carries the backend fingerprint, and the drift report reconciles
+      exactly with the table (``validate_drift`` returns no errors);
+    * ``seeded_measure_free`` — recompiling FROM the measured table runs
+      ZERO measurements even with ``measure=True`` (the measured table
+      is an artifact, not a trigger);
+    * ``seeded_byte_identical`` — and reproduces the table byte-for-byte
+      (measurements inherit verbatim through save/load/recompile).
+    """
+    from repro.configs import get_config
+    from repro.kernels import autotune
+    from repro.obs import MeasureOptions, drift_report, validate_drift
+    from repro.obs.profiler import clear_measure_cache
+    from repro.pipeline import ExecutionSpec, Serving, compile_cnn
+
+    rows: dict = {}
+    cfg = get_config("alexnet").smoke()
+    spec = ExecutionSpec(serving=Serving(batch=2, clock="modeled"))
+    opts = MeasureOptions(warmup=1, iters=1, repeats=1 if fast else 3,
+                          trim=0 if fast else 1, interpret=True)
+
+    autotune.clear_registry()
+    autotune.reset_measure_stats()
+    clear_measure_cache()
+    t0 = time.perf_counter()
+    compiled = compile_cnn(cfg, spec, with_engine=False, measure=True,
+                           measure_opts=opts)
+    cold_us = (time.perf_counter() - t0) * 1e6
+    cold_stats = autotune.measure_stats()
+    table = compiled.plan_table
+    report = drift_report(table)
+    errors = validate_drift(report, table=json.loads(table.to_json()))
+
+    autotune.reset_measure_stats()
+    warm = compile_cnn(cfg, spec, plans=table, with_engine=False,
+                       measure=True, measure_opts=opts)
+    warm_stats = autotune.measure_stats()
+
+    stats = report.get("ratio") or {}
+    meas = report.get("measurement") or {}
+    rows["alexnet_smoke_measured_compile"] = {
+        "us_per_call": cold_us,
+        "drift": dict(cold_stats, n_plans=report["n_plans"],
+                      n_measured=report["n_measured"])}
+    rows["measured_vs_modeled(alexnet)"] = {
+        "n_plans": report["n_plans"],
+        "n_measured": report["n_measured"],
+        "backend": meas.get("backend"),
+        "harness": meas.get("harness"),
+        "ratio_geomean": stats.get("geomean"),
+        "ratio_min": stats.get("min"),
+        "ratio_max": stats.get("max"),
+        "drift_provenance_ok": (
+            not errors
+            and report["n_plans"] > 0
+            and report["n_measured"] == report["n_plans"]
+            and meas.get("backend") is not None),
+        "seeded_measure_free":
+            sum(warm_stats.values()) == 0,
+        "seeded_byte_identical":
+            warm.plan_table.to_json() == table.to_json()}
+    return rows
+
+
 def check_against(path: str, rows: dict, *, tol: float = 0.10) -> tuple:
     """Compare modelled layer rows against a committed trajectory.
 
@@ -479,8 +559,10 @@ def main() -> None:
 
     conv_rows = conv_bench(args.fast)
     conv_rows.update(fleet_bench(args.fast))
-    # LAST: compile_bench clears the plan registry to time cold compiles
+    # LAST TWO: compile_bench and drift_bench clear the plan registry
+    # to time/measure cold compiles
     conv_rows.update(compile_bench(args.fast))
+    conv_rows.update(drift_bench(args.fast))
     # the int8 acceptance invariant is deterministic (pure cost model),
     # so it is enforced on EVERY run, gate or not: int8 must model
     # <= 0.5x fp32 on every bandwidth-bound conv layer
@@ -524,6 +606,24 @@ def main() -> None:
         f"plan registry/table must make recompiles sweep-free"
         for name, row in conv_rows.items()
         if name.endswith("_compile_warm") and not row["sweep_free"]]
+    # and the drift acceptance (PR 9): a measured compile must measure
+    # every plan with full provenance (report reconciles with the
+    # table), and a compile seeded from the measured table must run
+    # zero measurements and reproduce it byte-for-byte
+    for flag, why in (
+            ("drift_provenance_ok",
+             "drift report does not reconcile with the measured plan "
+             "table (coverage/fingerprint/validate_drift)"),
+            ("seeded_measure_free",
+             "compile seeded from the measured table re-ran "
+             "measurements (the table is an artifact, not a trigger)"),
+            ("seeded_byte_identical",
+             "compile seeded from the measured table did not reproduce "
+             "it byte-for-byte")):
+        violations += [
+            f"{name}: {why}"
+            for name, row in conv_rows.items()
+            if name.startswith("measured_vs_modeled(") and not row[flag]]
     # gate BEFORE writing: the committed file is the baseline, and a
     # failing gate must NOT overwrite it (a rerun would then compare the
     # regressed values against themselves and pass)

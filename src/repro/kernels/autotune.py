@@ -21,9 +21,13 @@ are per image, so plans tuned at different serve batches are comparable.
     (batch, H-tile), halo rows are re-fetched once per neighbouring tile).
   * :func:`get_plan` — pick the best-scoring feasible plan, memoised in a
     process-wide registry keyed by ``(layer shape, dtype, backend)``.
-  * :func:`measure_plan` — optional wall-clock refinement for a shortlist
-    of model-scored candidates (on-hardware benchmarking; the model alone
-    is used by default because interpret mode timing is meaningless).
+  * :func:`measure_plan` / :func:`measure_gemm_plan` — wall-clock
+    seconds/call for one plan, the primitive ``repro.obs.profiler`` builds
+    its measured-refinement pass from. Operand data is deterministic per
+    ``(shape, plan)`` (crc32-derived key, split into independent x/w
+    streams) and the ``interpret`` mode defaults to the process backend
+    mode (``ops.get_interpret()``) so a measurement is taken — and
+    recorded in provenance — in the mode that will actually run.
 
 Plans are plain frozen dataclasses so they can ride through ``jax.jit``
 static arguments, and the registry serialises to JSON for the benchmark
@@ -42,6 +46,20 @@ from repro.core.roofline import (MXU_DIM, VMEM_BYTES, mxu_utilization,
 from repro.kernels.conv_pipe import _round_up, conv_tile_geometry
 
 _DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}
+
+# The public autotune surface (pinned by tests/test_api_surface.py).
+__all__ = [
+    "ConvShape", "ConvPlan", "GemmShape", "GemmPlan",
+    "conv_vmem_bytes", "score_plan", "enumerate_plans", "best_plan",
+    "gemm_vmem_bytes", "score_gemm_plan", "enumerate_gemm_plans",
+    "best_gemm_plan",
+    "measure_plan", "measure_gemm_plan",
+    "get_plan", "get_gemm_plan", "plan_for_layer", "gemm_plan_for_layer",
+    "clear_registry", "registry_snapshot", "gemm_registry_snapshot",
+    "dump_registry", "seed_registry", "record_lookups",
+    "sweep_stats", "reset_sweep_stats",
+    "measure_stats", "reset_measure_stats", "count_measure_hit",
+]
 
 
 @dataclass(frozen=True)
@@ -230,9 +248,43 @@ def best_plan(shape: ConvShape,
                                        * p.oh_blk)))
 
 
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` -> the process backend mode (``ops.get_interpret()``).
+
+    Measuring the interpreter while the pipeline runs compiled (or vice
+    versa) is silently meaningless, so the default follows whatever mode
+    ``ops.interpret_mode`` / ``set_interpret`` put the process in — and
+    callers record the RESOLVED mode into measurement provenance.
+    """
+    if interpret is None:
+        from repro.kernels import ops
+        return ops.get_interpret()
+    return bool(interpret)
+
+
+def _measure_seed(shape, plan) -> int:
+    """Deterministic PRNG seed per ``(shape, plan)`` measurement point.
+
+    ``zlib.crc32`` of the reprs, NOT python ``hash()`` — string hashing
+    is salted per process (PYTHONHASHSEED), and re-measuring the same
+    point must benchmark identical operand bytes.
+    """
+    import zlib
+    return zlib.crc32(repr((shape, plan)).encode())
+
+
 def measure_plan(shape: ConvShape, plan: ConvPlan, *, iters: int = 3,
-                 interpret: bool = True) -> float:
-    """Wall-clock seconds/call for a plan (hardware refinement hook)."""
+                 warmup: int = 1,
+                 interpret: Optional[bool] = None) -> float:
+    """Wall-clock seconds/call for one conv plan (measured refinement).
+
+    ``warmup`` un-timed calls absorb compilation, then ``iters`` timed
+    calls are averaged. x and w come from SPLIT streams of one
+    crc32-derived key — deterministic per ``(shape, plan)`` and mutually
+    independent (a single reused key would correlate the operands).
+    Counted in :func:`measure_stats` (``conv_measured``), the measured
+    mirror of the ``sweep_stats`` DSE counters.
+    """
     import time
 
     import jax
@@ -240,11 +292,12 @@ def measure_plan(shape: ConvShape, plan: ConvPlan, *, iters: int = 3,
 
     from repro.kernels.conv_pipe import conv_pipe
 
-    key = jax.random.key(0)
-    x = jax.random.normal(key, (shape.b, shape.h, shape.w, shape.c),
+    interpret = _resolve_interpret(interpret)
+    kx, kw = jax.random.split(jax.random.key(_measure_seed(shape, plan)))
+    x = jax.random.normal(kx, (shape.b, shape.h, shape.w, shape.c),
                           jnp.float32)
-    w = jax.random.normal(key, (shape.kh, shape.kw,
-                                shape.c // shape.groups, shape.m),
+    w = jax.random.normal(kw, (shape.kh, shape.kw,
+                               shape.c // shape.groups, shape.m),
                           jnp.float32) * 0.1
     b = jnp.zeros((shape.m,))
     qkw = {}
@@ -270,11 +323,13 @@ def measure_plan(shape: ConvShape, plan: ConvPlan, *, iters: int = 3,
                          b_blk=plan.b_blk, groups=shape.groups,
                          interpret=interpret, **qkw)
 
-    run().block_until_ready()                 # compile / warm up
-    t0 = time.perf_counter()
-    for _ in range(iters):
+    for _ in range(max(1, warmup)):           # compile / warm up
         run().block_until_ready()
-    return (time.perf_counter() - t0) / iters
+    t0 = time.perf_counter()
+    for _ in range(max(1, iters)):
+        run().block_until_ready()
+    _MEASURE_STATS["conv_measured"] += 1
+    return (time.perf_counter() - t0) / max(1, iters)
 
 
 # ---------------------------------------------------------------------------
@@ -391,6 +446,55 @@ def best_gemm_plan(shape: GemmShape,
     return min(plans, key=lambda p: (p.t_model, -(p.bm * p.bn * p.bk)))
 
 
+def measure_gemm_plan(shape: GemmShape, plan: GemmPlan, *, iters: int = 3,
+                      warmup: int = 1,
+                      interpret: Optional[bool] = None) -> float:
+    """Wall-clock seconds/call for one GEMM blocking (the FC side).
+
+    The classifier mirror of :func:`measure_plan`: deterministic split
+    operand streams per ``(shape, plan)``, backend-aware ``interpret``
+    default, int8 shapes measured through the actual fixed-point kernel
+    (quantized operands + requantize scale, exactly what the plan's VMEM
+    feasibility was modeled at). Counted as ``gemm_measured`` in
+    :func:`measure_stats`.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.matmul_pipe import matmul_pipe
+
+    interpret = _resolve_interpret(interpret)
+    kx, kw = jax.random.split(jax.random.key(_measure_seed(shape, plan)))
+    x = jax.random.normal(kx, (shape.m, shape.k), jnp.float32)
+    w = jax.random.normal(kw, (shape.k, shape.n), jnp.float32) * 0.1
+    b = jnp.zeros((shape.n,))
+    qkw = {}
+    if shape.dtype == "int8":
+        from repro.quant.core import (abs_max_scale, quantize,
+                                      quantize_channelwise)
+        sx = float(abs_max_scale(x))
+        w, ws = quantize_channelwise(w, axis=-1)
+        x = quantize(x, sx)
+        qkw = dict(scale=ws * sx, out_scale=0.05)
+    else:
+        dt = jnp.float32 if shape.dtype == "float32" else jnp.bfloat16
+        x, w, b = x.astype(dt), w.astype(dt), b.astype(dt)
+
+    def run():
+        return matmul_pipe(x, w, b, bm=plan.bm, bn=plan.bn, bk=plan.bk,
+                           interpret=interpret, **qkw)
+
+    for _ in range(max(1, warmup)):           # compile / warm up
+        run().block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(max(1, iters)):
+        run().block_until_ready()
+    _MEASURE_STATS["gemm_measured"] += 1
+    return (time.perf_counter() - t0) / max(1, iters)
+
+
 _GEMM_REGISTRY: Dict[Tuple[GemmShape, str, int], GemmPlan] = {}
 
 # DSE accounting: how many sweeps actually ran vs how many lookups the
@@ -409,6 +513,31 @@ def sweep_stats() -> Dict[str, int]:
 def reset_sweep_stats() -> None:
     for k in _SWEEP_STATS:
         _SWEEP_STATS[k] = 0
+
+
+# Measurement accounting, mirroring the sweep counters above: how many
+# wall-clock kernel measurements actually ran (``*_measured``) vs how
+# many the profiler's cache absorbed (``*_measure_hits``). The counts
+# are deterministic even though the times are not, so tests and
+# benchmarks/run.py can assert that a compile seeded from a measured
+# plan table runs ZERO measurements.
+_MEASURE_STATS = {"conv_measured": 0, "conv_measure_hits": 0,
+                  "gemm_measured": 0, "gemm_measure_hits": 0}
+
+
+def measure_stats() -> Dict[str, int]:
+    """A snapshot of the kernel-measurement/cache-hit counters."""
+    return dict(_MEASURE_STATS)
+
+
+def reset_measure_stats() -> None:
+    for k in _MEASURE_STATS:
+        _MEASURE_STATS[k] = 0
+
+
+def count_measure_hit(kind: str) -> None:
+    """Record a profiler measurement-cache hit (``kind`` conv|gemm)."""
+    _MEASURE_STATS[f"{kind}_measure_hits"] += 1
 
 
 # Active lookup recorders: every get_plan / get_gemm_plan resolution

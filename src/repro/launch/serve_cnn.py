@@ -236,6 +236,22 @@ def main() -> None:
                          "to Prometheus text exposition format")
     ap.add_argument("--report-json", default=None, metavar="PATH",
                     help="dump FleetReport.to_dict() as JSON")
+    # -- measured refinement / drift flags (PR 9) ---------------------------
+    ap.add_argument("--measure", action="store_true",
+                    help="measured refinement at compile time: profile "
+                         "every resolved plan (repro.obs.profiler) and "
+                         "record t_measured + the backend fingerprint "
+                         "into the plan table (format 3)")
+    ap.add_argument("--measure-repeats", type=int, default=3,
+                    help="timing samples per plan for --measure "
+                         "(trimmed-mean over these)")
+    ap.add_argument("--plan-out", default=None, metavar="PATH",
+                    help="write the compiled plan table JSON (carries "
+                         "measurements under --measure)")
+    ap.add_argument("--drift-out", default=None, metavar="PATH",
+                    help="write the measured-vs-modeled drift report "
+                         "JSON (python -m repro.obs.drift format; "
+                         "meaningful with --measure)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -289,7 +305,17 @@ def main() -> None:
     elif args.mtbf:
         faults = FaultSchedule.mtbf(args.mtbf, args.mttr, replicas,
                                     seed=args.seed)
-    compiled = compile_cnn(cfg, spec)
+    trace = metrics = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import MetricsRegistry, TraceRecorder
+        trace = TraceRecorder() if args.trace_out else None
+        metrics = MetricsRegistry() if args.metrics_out else None
+    measure_opts = None
+    if args.measure:
+        from repro.obs import MeasureOptions
+        measure_opts = MeasureOptions(repeats=args.measure_repeats)
+    compiled = compile_cnn(cfg, spec, measure=args.measure,
+                           measure_opts=measure_opts, trace=trace)
     requests = synthetic_requests(n_req, cfg.input_hw, cfg.input_ch,
                                   args.rate,
                                   straggler_every=args.straggler_every,
@@ -315,11 +341,6 @@ def main() -> None:
     if faults is not None:
         print(f"[serve_cnn] chaos: {faults!r}, retries={args.retries}, "
               f"backoff={args.backoff}s")
-    trace = metrics = None
-    if args.trace_out or args.metrics_out:
-        from repro.obs import MetricsRegistry, TraceRecorder
-        trace = TraceRecorder() if args.trace_out else None
-        metrics = MetricsRegistry() if args.metrics_out else None
     rep = compiled.serve(requests, faults=faults, trace=trace,
                          metrics=metrics)
     # the resilience invariant: every request ends as exactly one
@@ -361,6 +382,26 @@ def main() -> None:
         print(f"[serve_cnn] plan table: {len(rows)} conv plans + "
               f"{len(gemm)} GEMM plans compiled ({dtype}); conv "
               f"(b,c,m,oh)_blk points: {picked}")
+    if args.plan_out:
+        compiled.save_plan(args.plan_out)
+        print(f"[serve_cnn] plan table "
+              f"({compiled.plan_table.summary()}) -> {args.plan_out}")
+    if args.measure or args.drift_out:
+        from repro.obs import drift_report, record_drift
+        drift = drift_report(compiled.plan_table)
+        stats = drift.get("ratio")
+        print(f"[serve_cnn] drift: {drift['n_measured']}/"
+              f"{drift['n_plans']} plans measured"
+              + (f", geomean ratio {stats['geomean']:.3g}x"
+                 if stats else ""))
+        if metrics is not None and args.measure:
+            record_drift(metrics, drift)
+        if args.drift_out:
+            import json
+            with open(args.drift_out, "w") as f:
+                json.dump(drift, f, sort_keys=True, indent=1)
+                f.write("\n")
+            print(f"[serve_cnn] drift report -> {args.drift_out}")
     if trace is not None:
         trace.save(args.trace_out)
         print(f"[serve_cnn] trace: {len(trace)} events -> "

@@ -1,21 +1,34 @@
-"""Observability for the serving stack: tracing, metrics, validation.
+"""Observability for the serving AND compile stacks.
 
-Three modules, no dependencies on the rest of ``repro`` (the serve
-loops import *us*):
+Five modules; trace/metrics/validate have no dependencies on the rest
+of ``repro`` (the serve loops import *us*), while profiler/drift reach
+into the kernel layer lazily (only when a measurement actually runs):
 
   * :mod:`repro.obs.trace` — :class:`TraceRecorder`, Chrome trace-event
     JSON export (Perfetto-viewable), byte-deterministic on the modeled
-    clock;
+    clock; since PR 9 it also carries compile-phase ``sweep``/
+    ``measure`` spans on the ``compile`` track;
   * :mod:`repro.obs.metrics` — :class:`MetricsRegistry` of counters /
     gauges / histograms / windows, JSON + Prometheus text exports;
-  * :mod:`repro.obs.validate` — schema validation and trace ↔ metrics ↔
-    ``FleetReport`` reconciliation (also a CLI:
-    ``python -m repro.obs.validate``).
+  * :mod:`repro.obs.profiler` — the measured-refinement harness
+    (deterministic warmup/iters/trimmed-mean timing over
+    ``autotune.measure_plan`` / ``measure_gemm_plan``, backend
+    fingerprints, the guided top-K :func:`~repro.obs.profiler.refine_plan`
+    pass, and :func:`~repro.obs.profiler.profile_table` behind
+    ``compile_cnn(measure=True)``);
+  * :mod:`repro.obs.drift` — measured-vs-modeled drift reports over a
+    format-3 plan table, drift gauges + ratio histogram for the
+    registry (also a CLI: ``python -m repro.obs.drift``);
+  * :mod:`repro.obs.validate` — schema validation, trace ↔ metrics ↔
+    ``FleetReport`` reconciliation, and drift ↔ plan-table
+    reconciliation (also a CLI: ``python -m repro.obs.validate``).
 """
 from .trace import (  # noqa: F401
+    CAT_COMPILE,
     CAT_FLEET,
     CAT_REQUEST,
     CAT_ROUND,
+    COMPILE_TRACK,
     FLEET_TRACK,
     TraceRecorder,
 )
@@ -28,8 +41,23 @@ from .metrics import (  # noqa: F401
     WindowSeries,
     record_report,
 )
+from .profiler import (  # noqa: F401
+    MeasureOptions,
+    backend_fingerprint,
+    clear_measure_cache,
+    measure_record,
+    profile_table,
+    refine_plan,
+    shortlist,
+)
+from .drift import (  # noqa: F401
+    DRIFT_RATIO_BUCKETS,
+    drift_report,
+    record_drift,
+)
 from .validate import (  # noqa: F401
     reconcile,
+    validate_drift,
     validate_metrics,
     validate_trace,
 )
@@ -39,7 +67,9 @@ __all__ = [
     "CAT_REQUEST",
     "CAT_ROUND",
     "CAT_FLEET",
+    "CAT_COMPILE",
     "FLEET_TRACK",
+    "COMPILE_TRACK",
     "MetricsRegistry",
     "Counter",
     "Gauge",
@@ -47,7 +77,18 @@ __all__ = [
     "WindowSeries",
     "DEFAULT_LATENCY_BUCKETS",
     "record_report",
+    "MeasureOptions",
+    "backend_fingerprint",
+    "clear_measure_cache",
+    "measure_record",
+    "profile_table",
+    "refine_plan",
+    "shortlist",
+    "DRIFT_RATIO_BUCKETS",
+    "drift_report",
+    "record_drift",
     "validate_trace",
     "validate_metrics",
+    "validate_drift",
     "reconcile",
 ]

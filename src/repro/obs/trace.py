@@ -38,7 +38,15 @@ validator counts them against ``FleetReport``, see
   hot_swap      i      fleet     a replica rolled onto a new artifact
   scale_up      i      fleet     autoscaler spun a replica up
   scale_down    i      fleet     autoscaler drained a replica out
+  sweep         X      compile   one compile's DSE resolve (lookups+sweeps)
+  measure       X      compile   one plan's wall-clock measurement
   ============  =====  ========  =======================================
+
+The ``compile`` track extends the same timeline down into the compile
+phase (PR 9): ``compile_cnn(..., trace=...)`` emits a ``sweep`` span
+over its DSE-resolve block and, with ``measure=True``, one ``measure``
+span per profiled plan — so one Perfetto view shows where compile time
+went before the first request span begins.
 """
 from __future__ import annotations
 
@@ -49,8 +57,10 @@ from typing import Dict, List, Optional
 CAT_REQUEST = "request"        # per-request lifecycle events
 CAT_ROUND = "round"            # gang-round execution spans
 CAT_FLEET = "fleet"            # fleet mutations (faults, swaps, scaling)
+CAT_COMPILE = "compile"        # compile-phase spans (DSE sweep, measure)
 
 FLEET_TRACK = "fleet"          # the non-replica instant track
+COMPILE_TRACK = "compile"      # the compile-phase span track
 
 
 class TraceRecorder:

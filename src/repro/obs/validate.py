@@ -1,8 +1,9 @@
 """Schema validation + reconciliation for serving observability artifacts.
 
-Three checks, each a pure function returning a list of error strings
+Four checks, each a pure function returning a list of error strings
 (empty = valid), plus a CLI (``python -m repro.obs.validate``) the CI
-serve-fleet job runs on the chaos+autoscale smoke artifacts:
+serve-fleet job runs on the chaos+autoscale smoke artifacts (and the
+examples job on the drift artifacts):
 
   * :func:`validate_trace` — every span/instant is well-formed Chrome
     trace-event JSON (name/ph/ts/pid/tid present, durations >= 0) and
@@ -14,7 +15,13 @@ serve-fleet job runs on the chaos+autoscale smoke artifacts:
     ``n_retries``/``n_failed``/``scale_events``), the metrics counters
     match the same report fields, and the report's p50/p95 fall inside
     the latency histogram's nearest-rank bucket (the one-bucket
-    reconstruction contract).
+    reconstruction contract);
+  * :func:`validate_drift` — a ``repro.obs.drift`` report is internally
+    consistent (counts add up, every measured row's ratio equals
+    ``t_measured / t_model_call``) and, given the plan-table document
+    it was derived from, reconciles EXACTLY with it: one report row per
+    plan entry, measured rows matching the table's per-row ``measured``
+    records one-for-one.
 
 Self-contained on purpose: imports nothing from ``repro.serve`` (the
 serve loops import ``repro.obs``), so the validator can also run
@@ -182,6 +189,80 @@ def reconcile(report: dict, trace: dict = None,
     return errors
 
 
+def validate_drift(report: dict, table: dict = None) -> List[str]:
+    """Internal consistency of a drift report document, and — given the
+    plan-table document it was derived from — exact reconciliation of
+    the report's rows/counts against the table's plan entries."""
+    errors: List[str] = []
+    for field in ("n_plans", "n_measured", "n_unmeasured", "counts",
+                  "rows"):
+        if field not in report:
+            return [f"drift report missing field {field!r}"]
+    rows = report["rows"]
+    counts = report["counts"]
+    if report["n_plans"] != len(rows):
+        errors.append(f"drift: n_plans {report['n_plans']} != "
+                      f"{len(rows)} rows")
+    if report["n_measured"] + report["n_unmeasured"] != report["n_plans"]:
+        errors.append("drift: n_measured + n_unmeasured != n_plans")
+    for kind in ("conv", "gemm"):
+        n_kind = sum(1 for r in rows if r.get("kind") == kind)
+        n_meas = sum(1 for r in rows if r.get("kind") == kind
+                     and r.get("t_measured") is not None)
+        if counts.get(kind) != n_kind:
+            errors.append(f"drift: counts[{kind!r}] {counts.get(kind)} "
+                          f"!= {n_kind} {kind} rows")
+        if counts.get(f"{kind}_measured") != n_meas:
+            errors.append(
+                f"drift: counts[{kind}_measured] "
+                f"{counts.get(f'{kind}_measured')} != {n_meas} measured "
+                f"{kind} rows")
+    for i, r in enumerate(rows):
+        if r.get("kind") not in ("conv", "gemm"):
+            errors.append(f"drift row[{i}]: bad kind {r.get('kind')!r}")
+            continue
+        tm = r.get("t_model_call")
+        if not isinstance(tm, (int, float)) or tm <= 0:
+            errors.append(f"drift row[{i}]: bad t_model_call {tm!r}")
+            continue
+        if r.get("t_measured") is None:
+            if r.get("ratio") is not None:
+                errors.append(f"drift row[{i}]: ratio without a "
+                              f"measurement")
+            continue
+        if r["t_measured"] <= 0:
+            errors.append(f"drift row[{i}]: t_measured "
+                          f"{r['t_measured']!r} not > 0")
+            continue
+        want = r["t_measured"] / tm
+        got = r.get("ratio")
+        if got is None or abs(got - want) > 1e-9 * max(1.0, abs(want)):
+            errors.append(f"drift row[{i}]: ratio {got!r} != "
+                          f"t_measured/t_model_call {want!r}")
+    if table is not None:
+        for kind in ("conv", "gemm"):
+            entries = table.get(kind, [])
+            if counts.get(kind) != len(entries):
+                errors.append(
+                    f"drift vs table: counts[{kind!r}] "
+                    f"{counts.get(kind)} != {len(entries)} table entries")
+            n_meas_tbl = sum(1 for e in entries if "measured" in e)
+            if counts.get(f"{kind}_measured") != n_meas_tbl:
+                errors.append(
+                    f"drift vs table: counts[{kind}_measured] "
+                    f"{counts.get(f'{kind}_measured')} != {n_meas_tbl} "
+                    f"measured table entries")
+            want_t = sorted(e["measured"]["t_measured"] for e in entries
+                            if "measured" in e)
+            got_t = sorted(r["t_measured"] for r in rows
+                           if r.get("kind") == kind
+                           and r.get("t_measured") is not None)
+            if want_t != got_t:
+                errors.append(f"drift vs table: measured {kind} times "
+                              f"do not match the table's records")
+    return errors
+
+
 def main(argv=None) -> int:
     import argparse
     ap = argparse.ArgumentParser(
@@ -189,6 +270,9 @@ def main(argv=None) -> int:
     ap.add_argument("--trace", help="Chrome trace-event JSON path")
     ap.add_argument("--metrics", help="metrics snapshot JSON path")
     ap.add_argument("--report", help="FleetReport.to_dict() JSON path")
+    ap.add_argument("--drift", help="repro.obs.drift report JSON path")
+    ap.add_argument("--plan-table",
+                    help="plan table JSON to reconcile --drift against")
     args = ap.parse_args(argv)
 
     def load(path):
@@ -217,6 +301,17 @@ def main(argv=None) -> int:
         errors += errs
         print(f"[obs.validate] reconcile vs {args.report}: "
               f"{len(errs)} errors")
+    if args.drift:
+        drift = load(args.drift)
+        table = load(args.plan_table) if args.plan_table else None
+        errs = validate_drift(drift, table=table)
+        errors += errs
+        print(f"[obs.validate] drift {args.drift}: "
+              f"{drift.get('n_measured', 0)}/{drift.get('n_plans', 0)} "
+              f"plans measured"
+              + (f", reconciled vs {args.plan_table}"
+                 if args.plan_table else "")
+              + f", {len(errs)} errors")
     for e in errors:
         print(f"[obs.validate] ERROR: {e}")
     print(f"[obs.validate] {'FAIL' if errors else 'OK'}")

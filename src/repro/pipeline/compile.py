@@ -35,7 +35,7 @@ import numpy as np
 
 from repro.core.config import CNNConfig
 from repro.kernels import autotune, ops
-from repro.pipeline.plan_table import PlanTable, load_plan
+from repro.pipeline.plan_table import PlanTable, load_plan, plan_key
 from repro.pipeline.spec import ExecutionSpec, resolve_config, \
     spec_from_config
 
@@ -244,11 +244,18 @@ class CompiledCNN:
         plan (as ``to_dict``), the compute/memory roofline terms in
         seconds (conv terms scaled to the batch; GEMM terms are already
         per call at the batch), their max ``t_model``, and which side
-        binds. This is the modeled Fig.-7 view the measured-autotuning
-        work will be compared against.
+        binds. When the plan table carries measurements (format 3, from
+        ``compile_cnn(measure=True)`` or an inherited measured
+        artifact), each row also reports ``t_measured`` (wall-clock
+        seconds/call) and ``drift`` (= measured / modeled, same per-call
+        unit) — ``None`` on unmeasured rows, so the modeled view is
+        unchanged when no profiler ran.
         """
+        import dataclasses
+
         batch = self.spec.serving.batch
         dtype = "int8" if self.quant else self.spec.run_dtype
+        measured = self.plan_table.measurements()
         rows: List[dict] = []
         for group, kind, shape in _group_shapes(self.cfg, batch, dtype):
             plan = self.group_plans.get(group)
@@ -266,11 +273,19 @@ class CompiledCNN:
                         shape, vmem_budget=self.cfg.vmem_budget)
                 tc, tm = autotune.score_gemm_plan(
                     shape, plan.bm, plan.bn, plan.bk)
+            t_model = max(tc, tm)
+            m = measured.get(plan_key(
+                {"shape": dataclasses.asdict(shape), "backend": "tpu",
+                 "vmem_budget": self.cfg.vmem_budget,
+                 "plan": plan.to_dict()}))
             rows.append({"group": list(group), "kind": kind,
                          "plan": plan.to_dict(),
                          "t_compute": tc, "t_memory": tm,
-                         "t_model": max(tc, tm),
-                         "bound": "compute" if tc >= tm else "memory"})
+                         "t_model": t_model,
+                         "bound": "compute" if tc >= tm else "memory",
+                         "t_measured": m["t_measured"] if m else None,
+                         "drift": (m["t_measured"] / t_model
+                                   if m and t_model > 0 else None)})
         return rows
 
     # -- the frozen plans as data ------------------------------------------
@@ -323,7 +338,9 @@ def compile_cnn(cfg: CNNConfig, spec: Optional[ExecutionSpec] = None,
                 params_or_calib=None, *,
                 plans: Optional[PlanTable] = None,
                 plan_path: Optional[str] = None,
-                key=None, with_engine: bool = True) -> CompiledCNN:
+                key=None, with_engine: bool = True,
+                measure: bool = False, measure_opts=None,
+                trace=None) -> CompiledCNN:
     """Compile a CNN into a :class:`CompiledCNN` (the toolflow's offline
     phase: precision + plans + placement resolved once, run many).
 
@@ -339,12 +356,30 @@ def compile_cnn(cfg: CNNConfig, spec: Optional[ExecutionSpec] = None,
     ``plans`` / ``plan_path`` pre-seed the autotune registries from a
     saved plan table so compilation performs no DSE sweep; the returned
     object's own table is re-captured (and is identical for the same
-    spec — the registry is authoritative either way).
+    spec — the registry is authoritative either way). A seeded compile
+    also inherits the seed table's measurements AND provenance verbatim
+    — it runs zero measurements even with ``measure=True``
+    (``autotune.measure_stats`` proves it), preserving artifact
+    save→load→save byte-equality.
+
+    ``measure=True`` (cold compiles only) runs the
+    ``repro.obs.profiler`` measured-refinement pass over every resolved
+    plan: the returned table is format 3, carrying per-plan
+    ``t_measured`` + the backend fingerprint, under the protocol in
+    ``measure_opts`` (a :class:`~repro.obs.profiler.MeasureOptions`;
+    defaults are CI-safe).
+
+    ``trace`` (a :class:`~repro.obs.TraceRecorder`) records the compile
+    phase onto the ``compile`` track: one ``sweep`` span over the DSE
+    resolve, one ``measure`` span per profiled plan — the compile-side
+    half of the serving timeline.
 
     ``with_engine=False`` skips serving-engine/mesh construction (used
     by the ``cnn_forward`` shim, which only needs ``.forward``); the
     engine is then built lazily on first ``.serve``.
     """
+    import time as _time
+
     from repro.models.cnn import init_cnn_params
     from repro.quant.calibrate import QuantizedCNNParams, calibrate_cnn
 
@@ -379,6 +414,7 @@ def compile_cnn(cfg: CNNConfig, spec: Optional[ExecutionSpec] = None,
 
     # -- compile: calibration, DSE, stage planning, mesh -------------------
     sweeps_before = autotune.sweep_stats()
+    t0 = _time.perf_counter()
     with autotune.record_lookups() as rec:
         if quantize and not isinstance(params, QuantizedCNNParams):
             if calib is None:
@@ -411,21 +447,39 @@ def compile_cnn(cfg: CNNConfig, spec: Optional[ExecutionSpec] = None,
             # construction happen HERE, inside the compile
             engine = ServeEngine.from_spec(rcfg, params, spec)
 
+    sweeps_after = autotune.sweep_stats()
+    sweep_delta = {k: sweeps_after[k] - sweeps_before[k]
+                   for k in sorted(sweeps_after)}
+    if trace is not None:
+        from repro.obs.trace import CAT_COMPILE, COMPILE_TRACK
+        trace.span("sweep", 0.0, _time.perf_counter() - t0,
+                   track=COMPILE_TRACK, cat=CAT_COMPILE,
+                   args={"lookups": {"conv": len(rec["conv"]),
+                                     "gemm": len(rec["gemm"])},
+                         **sweep_delta})
+
     if plans is not None:
         # a seeded compile re-captures the SAME plans: carry the seed
-        # table's provenance verbatim so save -> load -> re-compile ->
-        # save stays byte-identical (the artifact round-trip contract)
-        provenance = dict(plans.provenance)
+        # table's provenance AND measurements verbatim so save -> load
+        # -> re-compile -> save stays byte-identical (the artifact
+        # round-trip contract). No profiler runs here, measure flag or
+        # not — the measurements ARE the artifact.
+        table = PlanTable.from_rows(
+            rec["conv"], rec["gemm"],
+            provenance=plans.provenance).with_measurements(
+                plans.measurements())
     else:
-        sweeps_after = autotune.sweep_stats()
         provenance = {
-            "sweep_stats": {k: sweeps_after[k] - sweeps_before[k]
-                            for k in sorted(sweeps_after)},
+            "sweep_stats": sweep_delta,
             "lookups": {"conv": len(rec["conv"]),
                         "gemm": len(rec["gemm"])},
         }
-    table = PlanTable.from_rows(rec["conv"], rec["gemm"],
-                                provenance=provenance)
+        table = PlanTable.from_rows(rec["conv"], rec["gemm"],
+                                    provenance=provenance)
+        if measure:
+            from repro.obs.profiler import profile_table
+            table = profile_table(table, opts=measure_opts, trace=trace,
+                                  t0=t0)
     return CompiledCNN(cfg=rcfg, spec=spec, params=params, quant=quant,
                        group_plans=group_plans, plan_table=table,
                        engine=engine)

@@ -11,25 +11,56 @@ already uses. A committed table round-trips byte-identically
 into a fresh process, seeds the autotune registries so a re-compile is
 pure cache hits — zero DSE sweeps (asserted by tests via
 ``autotune.sweep_stats``).
-Format 2 adds **provenance**: a free-form (but JSON-canonical) dict
-recording where the plans came from — the compile's DSE sweep counts
-(``autotune.sweep_stats`` delta), lookup totals, and anything else the
-producer wants a trace/report to show about the plans its spans
-executed. Provenance is carried and round-tripped byte-identically but
-excluded from equality: two tables with the same plans are the same
-table, however they were arrived at. Format-1 files (no provenance)
-still load.
+
+Document format history (all older formats still load):
+
+  ======  ==================================================================
+  format  adds
+  ======  ==================================================================
+  1       ``conv`` / ``gemm`` row lists (the registry-snapshot records)
+  2       ``provenance`` — free-form JSON-canonical dict recording where
+          the plans came from (DSE sweep-count delta, lookup totals);
+          carried and round-tripped byte-identically but excluded from
+          equality
+  3       per-row ``measured`` dicts — wall-clock ``t_measured`` seconds
+          per call plus the harness parameters that produced it, written
+          by the ``repro.obs.profiler`` measured-refinement pass;
+          ``provenance["measurement"]`` carries the backend fingerprint
+          the numbers are only meaningful next to. Seeded compiles
+          inherit measurements verbatim (:meth:`PlanTable.measurements`
+          / :meth:`PlanTable.with_measurements`), preserving the
+          artifact save→load→save byte-equality contract
+  ======  ==================================================================
+
+Unlike provenance, a row's ``measured`` dict participates in row
+identity (the row IS its bytes under ``_canon``), so two tables with
+different measurements are different tables — re-measuring is an
+explicit act, not a silent overwrite.
 """
 from __future__ import annotations
 
 import json
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.kernels import autotune
 
-_FORMAT = 2
-_ACCEPTED_FORMATS = (1, 2)
+_FORMAT = 3
+_ACCEPTED_FORMATS = (1, 2, 3)
+
+# The row fields that identify WHAT a plan entry is (everything except
+# the attached measurement) — the join key between a plan row, its
+# measured record, and a drift-report row.
+_KEY_FIELDS = ("shape", "backend", "vmem_budget", "plan")
+
+
+def plan_key(row: dict) -> str:
+    """Canonical identity of one plan row: the sorted JSON of its
+    shape/backend/vmem_budget/plan fields. Shared by
+    :meth:`PlanTable.measurements`, ``CompiledCNN.roofline_breakdown``
+    and ``repro.obs`` so they can never disagree on which measurement
+    belongs to which plan."""
+    return json.dumps({k: row[k] for k in _KEY_FIELDS}, sort_keys=True)
 
 
 def _canon(rows: List[dict]) -> Tuple[dict, ...]:
@@ -114,8 +145,61 @@ class PlanTable:
         """
         return autotune.seed_registry(self.conv, self.gemm)
 
+    # -- measurements (format 3) -------------------------------------------
+
+    def measurements(self) -> Dict[str, dict]:
+        """``plan_key(row) -> measured`` for every measured row.
+
+        Conv and gemm rows share one mapping — their shape dicts have
+        disjoint field sets, so keys cannot collide. This is what a
+        seeded compile inherits verbatim (:func:`plan_key` joins the
+        re-captured lookup rows back to the seed table's measurements).
+        """
+        out: Dict[str, dict] = {}
+        for rows in (self.conv, self.gemm):
+            for row in rows:
+                if "measured" in row:
+                    out[plan_key(row)] = row["measured"]
+        return out
+
+    def with_measurements(self, measured: Dict[str, dict],
+                          provenance: Optional[dict] = None
+                          ) -> "PlanTable":
+        """A new table with ``measured`` records attached by plan key.
+
+        Rows whose key is absent from ``measured`` are carried
+        unchanged; rows that already carry a measurement are overwritten
+        only when the mapping names them. ``provenance`` replaces the
+        table's provenance when given (the profiler attaches its backend
+        fingerprint this way); with no measurements and no provenance
+        the table is returned as-is, so the unmeasured seeded-compile
+        path costs nothing.
+        """
+        if not measured and provenance is None:
+            return self
+
+        def attach(rows):
+            out = []
+            for row in rows:
+                m = measured.get(plan_key(row))
+                if m is not None:
+                    row = {k: v for k, v in row.items()
+                           if k != "measured"}
+                    row["measured"] = dict(m)
+                out.append(row)
+            return out
+
+        return PlanTable.from_rows(
+            attach(self.conv), attach(self.gemm),
+            provenance=self.provenance if provenance is None
+            else provenance)
+
     def summary(self) -> Dict[str, int]:
-        return {"conv_plans": len(self.conv), "gemm_plans": len(self.gemm)}
+        d = {"conv_plans": len(self.conv), "gemm_plans": len(self.gemm)}
+        n_measured = len(self.measurements())
+        if n_measured:         # absent pre-measurement: byte-compat with
+            d["measured_plans"] = n_measured   # committed BENCH rows
+        return d
 
 
 def load_plan(path: str) -> PlanTable:

@@ -34,7 +34,9 @@ OBS_SURFACE = {
     "CAT_REQUEST",
     "CAT_ROUND",
     "CAT_FLEET",
+    "CAT_COMPILE",
     "FLEET_TRACK",
+    "COMPILE_TRACK",
     "MetricsRegistry",
     "Counter",
     "Gauge",
@@ -42,9 +44,56 @@ OBS_SURFACE = {
     "WindowSeries",
     "DEFAULT_LATENCY_BUCKETS",
     "record_report",
+    # the measured-refinement profiler + drift loop (PR 9)
+    "MeasureOptions",
+    "backend_fingerprint",
+    "clear_measure_cache",
+    "measure_record",
+    "profile_table",
+    "refine_plan",
+    "shortlist",
+    "DRIFT_RATIO_BUCKETS",
+    "drift_report",
+    "record_drift",
     "validate_trace",
     "validate_metrics",
+    "validate_drift",
     "reconcile",
+}
+
+# repro.kernels.autotune grew a declared surface with the measured-
+# refinement hooks; the DSE/measure/registry entry points the profiler,
+# plan table and benchmarks build on are pinned here.
+AUTOTUNE_SURFACE = {
+    "ConvShape",
+    "ConvPlan",
+    "GemmShape",
+    "GemmPlan",
+    "conv_vmem_bytes",
+    "score_plan",
+    "enumerate_plans",
+    "best_plan",
+    "gemm_vmem_bytes",
+    "score_gemm_plan",
+    "enumerate_gemm_plans",
+    "best_gemm_plan",
+    "measure_plan",
+    "measure_gemm_plan",
+    "get_plan",
+    "get_gemm_plan",
+    "plan_for_layer",
+    "gemm_plan_for_layer",
+    "clear_registry",
+    "registry_snapshot",
+    "gemm_registry_snapshot",
+    "dump_registry",
+    "seed_registry",
+    "record_lookups",
+    "sweep_stats",
+    "reset_sweep_stats",
+    "measure_stats",
+    "reset_measure_stats",
+    "count_measure_hit",
 }
 
 OPS_SURFACE = {
@@ -88,13 +137,21 @@ def test_compiled_cnn_runtime_surface():
             f"CompiledCNN.{method} missing"
 
 
+def test_autotune_exports_exactly_the_contract():
+    import repro.kernels.autotune as autotune
+    assert set(autotune.__all__) == AUTOTUNE_SURFACE
+    for name in AUTOTUNE_SURFACE:
+        assert hasattr(autotune, name), \
+            f"repro.kernels.autotune.{name} missing"
+
+
 def test_compile_cnn_signature_stable():
     """The compile entry point's keyword surface (shims + CLI rely on
     these exact names)."""
     sig = inspect.signature(pipeline.compile_cnn)
     assert list(sig.parameters) == [
         "cfg", "spec", "params_or_calib", "plans", "plan_path", "key",
-        "with_engine"]
+        "with_engine", "measure", "measure_opts", "trace"]
 
 
 def test_execution_spec_subspec_fields():

@@ -158,6 +158,63 @@ def test_load_plan_skips_dse_sweep():
     assert st["conv_sweeps"] > 0          # without the table it sweeps
 
 
+def test_plan_table_format_back_compat():
+    """format-1 (rows only) and format-2 (rows + provenance) documents
+    load into the format-3 world; unknown formats are rejected."""
+    cfg, params, _ = _setup()
+    c = compile_cnn(cfg, ExecutionSpec(serving=Serving(batch=4)), params)
+    doc = json.loads(c.plan_table.to_json())
+    assert doc["format"] == 3
+
+    f1 = json.dumps({"format": 1, "conv": doc["conv"],
+                     "gemm": doc["gemm"]})
+    t1 = PlanTable.from_json(f1)
+    assert t1 == c.plan_table            # provenance excluded from eq
+    assert t1.provenance == {}
+    assert json.loads(t1.to_json())["format"] == 3   # re-saves current
+
+    f2 = json.dumps({"format": 2, "conv": doc["conv"],
+                     "gemm": doc["gemm"],
+                     "provenance": {"src": "committed"}})
+    t2 = PlanTable.from_json(f2)
+    assert t2 == c.plan_table
+    assert t2.provenance == {"src": "committed"}
+
+    with pytest.raises(ValueError, match="format"):
+        PlanTable.from_json(
+            json.dumps({"format": 99, "conv": [], "gemm": []}))
+
+
+def test_plan_table_measured_roundtrip_byte_stable():
+    """A format-3 table WITH measurements round-trips byte-identically;
+    measurements attach by plan key, show up in the summary, and
+    participate in table identity (unlike provenance)."""
+    from repro.pipeline.plan_table import plan_key
+
+    cfg, params, _ = _setup()
+    c = compile_cnn(cfg, ExecutionSpec(serving=Serving(batch=4)), params)
+    tbl = c.plan_table
+    assert "measured_plans" not in tbl.summary()     # unmeasured: absent
+
+    k0 = plan_key(tbl.conv[0])
+    rec = {"t_measured": 1.5e-4, "t_model_call": 3e-5, "interpret": True,
+           "warmup": 1, "iters": 1, "repeats": 3, "trim": 1}
+    prov = {"measurement": {"backend": {"platform": "cpu"}}}
+    m = tbl.with_measurements({k0: rec}, provenance=prov)
+    assert m.measurements() == {k0: rec}
+    assert m.summary()["measured_plans"] == 1
+    assert m != tbl               # measurements ARE part of identity
+
+    text = m.to_json()
+    again = PlanTable.from_json(text)
+    assert again.to_json() == text
+    assert again.provenance == prov
+    # inheriting the same measurements verbatim is byte-stable — the
+    # seeded-compile contract at the table level
+    assert m.with_measurements(again.measurements(),
+                               provenance=prov).to_json() == text
+
+
 # ---------------------------------------------------------------------------
 # forward parity vs the pre-refactor paths
 # ---------------------------------------------------------------------------
