@@ -495,6 +495,39 @@ def drift_bench(fast: bool) -> dict:
     return rows
 
 
+def analysis_bench(fast: bool) -> dict:
+    """Static-analysis trajectory row (PR 10): the pre-flight's own cost.
+
+    One ``analysis_wall`` row records the wall time of a full
+    static-verification pass — the determinism/contract lint over
+    ``src/repro`` plus a Head-1 verification of the process plan
+    registry snapshot. Wall clock, so the row is INFORMATIONAL and
+    deliberately named outside the ``*_model`` perf gate; the attached
+    counters (files scanned, findings) are what future PRs diff. The
+    pass must stay pure: it is the one stage here that performs zero
+    sweeps and zero measurements (asserted, like the other invariants).
+    """
+    from repro.analysis import run_lint, verify_plan_table
+    from repro.kernels import autotune
+    from repro.pipeline.plan_table import PlanTable
+
+    sweep0, meas0 = autotune.sweep_stats(), autotune.measure_stats()
+    t0 = time.perf_counter()
+    lint_findings, n_files = run_lint("src/repro", repo_root=".")
+    table = PlanTable.from_registry()
+    verify_findings = verify_plan_table(table, path="registry")
+    wall_us = (time.perf_counter() - t0) * 1e6
+    assert autotune.sweep_stats() == sweep0, "static analysis swept"
+    assert autotune.measure_stats() == meas0, "static analysis measured"
+    return {"analysis_wall": {
+        "us_per_call": wall_us,
+        "analysis": {"files_scanned": n_files,
+                     "lint_findings": len(lint_findings),
+                     "verify_rows": len(table),
+                     "verify_findings": len(verify_findings),
+                     "pure": True}}}
+
+
 def check_against(path: str, rows: dict, *, tol: float = 0.10) -> tuple:
     """Compare modelled layer rows against a committed trajectory.
 
@@ -563,6 +596,10 @@ def main() -> None:
     # to time/measure cold compiles
     conv_rows.update(compile_bench(args.fast))
     conv_rows.update(drift_bench(args.fast))
+    # LAST: the static-analysis pass verifies the registry the two cold
+    # compiles above just populated (informational wall-clock row,
+    # outside the *_model gate by construction)
+    conv_rows.update(analysis_bench(args.fast))
     # the int8 acceptance invariant is deterministic (pure cost model),
     # so it is enforced on EVERY run, gate or not: int8 must model
     # <= 0.5x fp32 on every bandwidth-bound conv layer

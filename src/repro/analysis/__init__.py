@@ -1,0 +1,34 @@
+"""repro.analysis — static verification for plans, specs, and
+determinism contracts.
+
+The paper's toolflow proves a kernel configuration fits the FPGA before
+synthesis; this package is the same pre-flight for the TPU repro, with
+two heads behind one CLI (``python -m repro.analysis``):
+
+* **artifact verifier** (:mod:`repro.analysis.plans`) — re-proves VMEM
+  budgets, block/halo geometry, dtype/spec consistency, fusion-group
+  coverage and measured-record reconciliation of a committed
+  ``PlanTable`` / ``CompiledCNN.save`` artifact, without running any
+  kernel;
+* **determinism & contract lint** (:mod:`repro.analysis.lint`) — an AST
+  pass over the source tree for the bug classes that break byte-stable
+  artifacts and the modeled clock (RPA1xx) or the frozen API contracts
+  (RPA2xx).
+
+Findings carry stable ``RPA<nnn>`` codes (:data:`repro.analysis.CODES`);
+the CLI exits nonzero on any non-baseline finding and emits a JSON
+report that ``repro.obs.validate --analysis`` schema-checks in CI.
+"""
+from repro.analysis.findings import (CODES, Finding, baseline_doc,
+                                     load_baseline, report_doc)
+from repro.analysis.lint import (check_api_snapshots, lint_file,
+                                 lint_source, run_lint)
+from repro.analysis.plans import (verify_artifact, verify_compiled,
+                                  verify_plan_table)
+
+__all__ = [
+    "CODES", "Finding", "baseline_doc", "check_api_snapshots",
+    "lint_file", "lint_source", "load_baseline", "report_doc",
+    "run_lint", "verify_artifact", "verify_compiled",
+    "verify_plan_table",
+]

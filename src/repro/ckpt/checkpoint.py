@@ -88,7 +88,8 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> Path:
             np.save(tmp / f"leaf_{i}.npy", arr)
             manifest["leaves"].append(
                 {"shape": list(arr.shape), "dtype": str(arr.dtype)})
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        (tmp / "manifest.json").write_text(
+            json.dumps(manifest, sort_keys=True))
 
     return commit_dir(Path(ckpt_dir) / f"step_{step:08d}", write)
 

@@ -21,6 +21,22 @@ from typing import List, Optional, Sequence, Tuple
 FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
 
 
+class SpecError(ValueError):
+    """A config/spec field failed cross-validation.
+
+    Carries the dotted name of the offending field (``.field``, e.g.
+    ``"Precision.quant"`` or ``"CNNConfig.pp_stages"``) so constructor
+    rejections and ``repro.analysis`` verifier findings can name the
+    same knob with the same words. Subclasses ``ValueError`` so every
+    pre-existing ``except ValueError`` / ``pytest.raises(ValueError)``
+    site keeps working.
+    """
+
+    def __init__(self, field: str, message: str):
+        self.field = field
+        super().__init__(message)
+
+
 @dataclass(frozen=True)
 class ModelConfig:
     """Unified configuration for every supported LM-family architecture."""
@@ -277,27 +293,32 @@ class CNNConfig:
         is where contradictions are cheapest to reject.
         """
         if self.quant not in ("none", "int8"):
-            raise ValueError(
+            raise SpecError(
+                "CNNConfig.quant",
                 f"CNNConfig.quant={self.quant!r}: expected 'none' or 'int8'")
         if self.quant == "int8" and self.calib <= 0:
-            raise ValueError(
+            raise SpecError(
+                "CNNConfig.calib",
                 "CNNConfig.quant='int8' needs a calibration source: set "
                 "calib > 0 (the synthetic calibration-batch size; unused "
                 "— but still required — when pre-calibrated "
                 "QuantizedCNNParams are handed to compile/forward)")
         if self.replicas < 1 or self.pp_stages < 1:
-            raise ValueError(
+            raise SpecError(
+                "CNNConfig.replicas",
                 f"CNNConfig.replicas={self.replicas} / "
                 f"pp_stages={self.pp_stages}: both must be >= 1")
         n_groups = self.n_fuse_groups
         if self.layers and self.pp_stages > n_groups:
-            raise ValueError(
+            raise SpecError(
+                "CNNConfig.pp_stages",
                 f"CNNConfig.pp_stages={self.pp_stages} exceeds the "
                 f"{n_groups} indivisible fusion groups of {self.name!r}; "
                 f"a pipeline stage cannot be finer than one fused "
                 f"conv(+pool) launch — lower pp_stages to <= {n_groups}")
         if self.b_blk > 1 and self.serve_batch % self.b_blk:
-            raise ValueError(
+            raise SpecError(
+                "CNNConfig.serve_batch",
                 f"CNNConfig.serve_batch={self.serve_batch} is not a "
                 f"multiple of b_blk={self.b_blk}: the serving queue pads "
                 f"requests to serve_batch, so the conv grid's image block "

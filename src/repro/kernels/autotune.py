@@ -50,8 +50,10 @@ _DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}
 # The public autotune surface (pinned by tests/test_api_surface.py).
 __all__ = [
     "ConvShape", "ConvPlan", "GemmShape", "GemmPlan",
-    "conv_vmem_bytes", "score_plan", "enumerate_plans", "best_plan",
-    "gemm_vmem_bytes", "score_gemm_plan", "enumerate_gemm_plans",
+    "conv_vmem_bytes", "plan_fits", "score_plan", "enumerate_plans",
+    "best_plan",
+    "gemm_vmem_bytes", "gemm_plan_fits", "score_gemm_plan",
+    "enumerate_gemm_plans",
     "best_gemm_plan",
     "measure_plan", "measure_gemm_plan",
     "get_plan", "get_gemm_plan", "plan_for_layer", "gemm_plan_for_layer",
@@ -147,6 +149,20 @@ def conv_vmem_bytes(shape: ConvShape, c_blk: int, m_blk: int,
     o_tile = b_blk * pr * pw * m_blk * dt
     acc = b_blk * oh_ext * shape.ow * m_blk * 4    # fp32 / int32 scratch
     return 2 * (x_tile + w_tile + b_tile + s_tile + o_tile) + acc
+
+
+def plan_fits(shape: ConvShape, plan: ConvPlan,
+              vmem_budget: int = VMEM_BYTES) -> bool:
+    """Pure feasibility predicate: does ``plan`` fit ``vmem_budget``?
+
+    The exact constraint :func:`enumerate_plans` applies when it prunes
+    the sweep, factored out so static checkers (``repro.analysis``) can
+    re-prove feasibility of a committed plan row without running any
+    sweep or kernel. No side effects: no registry access, no
+    sweep-counter bump.
+    """
+    return conv_vmem_bytes(shape, plan.c_blk, plan.m_blk, plan.oh_blk,
+                           plan.b_blk) <= vmem_budget
 
 
 def score_plan(shape: ConvShape, c_blk: int, m_blk: int,
@@ -325,10 +341,11 @@ def measure_plan(shape: ConvShape, plan: ConvPlan, *, iters: int = 3,
 
     for _ in range(max(1, warmup)):           # compile / warm up
         run().block_until_ready()
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()   # repro: allow[RPA102] the measurement harness
     for _ in range(max(1, iters)):
         run().block_until_ready()
     _MEASURE_STATS["conv_measured"] += 1
+    # repro: allow[RPA102] measured seconds/call IS this function's output
     return (time.perf_counter() - t0) / max(1, iters)
 
 
@@ -387,6 +404,14 @@ def gemm_vmem_bytes(shape: GemmShape, bm: int, bn: int, bk: int) -> int:
     o_t = bm * bn * dt
     acc = bm * bn * 4
     return 2 * (x_t + w_t + b_t + s_t + o_t) + acc
+
+
+def gemm_plan_fits(shape: GemmShape, plan: GemmPlan,
+                   vmem_budget: int = VMEM_BYTES) -> bool:
+    """Pure feasibility predicate for a GEMM blocking (see
+    :func:`plan_fits`) — the :func:`enumerate_gemm_plans` pruning
+    constraint as a side-effect-free function."""
+    return gemm_vmem_bytes(shape, plan.bm, plan.bn, plan.bk) <= vmem_budget
 
 
 def score_gemm_plan(shape: GemmShape, bm: int, bn: int,
@@ -488,10 +513,11 @@ def measure_gemm_plan(shape: GemmShape, plan: GemmPlan, *, iters: int = 3,
 
     for _ in range(max(1, warmup)):           # compile / warm up
         run().block_until_ready()
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()   # repro: allow[RPA102] the measurement harness
     for _ in range(max(1, iters)):
         run().block_until_ready()
     _MEASURE_STATS["gemm_measured"] += 1
+    # repro: allow[RPA102] measured seconds/call IS this function's output
     return (time.perf_counter() - t0) / max(1, iters)
 
 

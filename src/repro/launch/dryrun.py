@@ -155,13 +155,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     rules.update(rules_for_mesh(
         mesh, seq_shard_batch1=(shape.global_batch == 1)))
 
-    t0 = time.time()
+    t0 = time.time()   # repro: allow[RPA102] compile-cost stopwatch
     with sharding_ctx(mesh, rules):
         fn, args, donate = build_cell(cfg, shape, mesh, rules)
         with mesh:
             lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            # repro: allow[RPA102] compile-cost stopwatch
             t_lower = time.time() - t0
             compiled = lowered.compile()
+            # repro: allow[RPA102] compile-cost stopwatch
             t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
@@ -239,7 +241,7 @@ def run_cell_scaled(arch: str, shape_name: str, verbose: bool = True,
     if rules_over:
         rules.update(rules_over)
 
-    t0 = time.time()
+    t0 = time.time()   # repro: allow[RPA102] compile-cost stopwatch
     kw = {}
     # SSD/mLSTM chunk tiling for long-sequence roofline cells: Q=512 keeps
     # the unrolled chunk count compile-tractable (64/layer at 32k) and is
@@ -308,6 +310,7 @@ def run_cell_scaled(arch: str, shape_name: str, verbose: bool = True,
         method="layer_extrapolation",
         points=[{k: p[k] for k in ("flops", "bytes", "coll")}
                 for p in points],
+        # repro: allow[RPA102] compile-cost stopwatch
         compile_s=round(time.time() - t0, 1),
         argument_bytes_per_device=mem.get("argument_bytes_per_device", 0),
         temp_bytes_per_device=mem.get("temp_bytes_per_device", 0),
@@ -364,7 +367,7 @@ def main():
                 result = run_cell_scaled(arch, shape)
             else:
                 result = run_cell(arch, shape, mp, unroll=args.unroll)
-            out.write_text(json.dumps(result, indent=1))
+            out.write_text(json.dumps(result, sort_keys=True, indent=1))
         except Exception as e:
             failures.append((arch, shape, mesh_name, repr(e)))
             print(f"[dryrun] FAIL {arch} x {shape} x {mesh_name}: {e}")

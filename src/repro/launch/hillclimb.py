@@ -121,7 +121,7 @@ def main():
             res["cfg_over"] = cfg_over
             res["rules_over"] = {k: list(v) if isinstance(v, tuple) else v
                                  for k, v in rules_over.items()}
-            out_file.write_text(json.dumps(res, indent=1))
+            out_file.write_text(json.dumps(res, sort_keys=True, indent=1))
             if prev:
                 for k in ("t_compute", "t_memory", "t_collective"):
                     d = res[k] / max(prev[k], 1e-12) - 1

@@ -58,9 +58,9 @@ def main():
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab)
     s_max = args.prompt_len + args.gen + 8
-    t0 = time.time()
+    t0 = time.time()   # repro: allow[RPA102] user-facing tok/s readout
     out = generate(params, prompts, cfg, args.gen, s_max)
-    dt = time.time() - t0
+    dt = time.time() - t0   # repro: allow[RPA102] user-facing tok/s readout
     print(f"[serve] {args.arch}: generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")
     print("[serve] sample:", out[0, -args.gen:].tolist())

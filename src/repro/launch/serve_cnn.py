@@ -252,6 +252,11 @@ def main() -> None:
                     help="write the measured-vs-modeled drift report "
                          "JSON (python -m repro.obs.drift format; "
                          "meaningful with --measure)")
+    ap.add_argument("--verify", action="store_true",
+                    help="static pre-flight (repro.analysis): re-prove "
+                         "VMEM budgets, tile geometry, spec consistency "
+                         "and fusion-group coverage of the compiled "
+                         "plan table, and refuse to serve on findings")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -316,6 +321,16 @@ def main() -> None:
         measure_opts = MeasureOptions(repeats=args.measure_repeats)
     compiled = compile_cnn(cfg, spec, measure=args.measure,
                            measure_opts=measure_opts, trace=trace)
+    if args.verify:
+        findings = compiled.verify()
+        for f in findings:
+            print(f"[serve_cnn] VERIFY {f}")
+        if findings:
+            raise SystemExit(
+                f"[serve_cnn] --verify: {len(findings)} static "
+                f"finding(s) — refusing to serve {args.arch!r}")
+        print(f"[serve_cnn] --verify: plan table statically verified "
+              f"({len(compiled.plan_table)} rows, 0 findings)")
     requests = synthetic_requests(n_req, cfg.input_hw, cfg.input_ch,
                                   args.rate,
                                   straggler_every=args.straggler_every,

@@ -57,6 +57,7 @@ from .drift import (  # noqa: F401
 )
 from .validate import (  # noqa: F401
     reconcile,
+    validate_analysis,
     validate_drift,
     validate_metrics,
     validate_trace,
@@ -90,5 +91,6 @@ __all__ = [
     "validate_trace",
     "validate_metrics",
     "validate_drift",
+    "validate_analysis",
     "reconcile",
 ]

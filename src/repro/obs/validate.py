@@ -263,6 +263,58 @@ def validate_drift(report: dict, table: dict = None) -> List[str]:
     return errors
 
 
+def validate_analysis(doc: dict) -> List[str]:
+    """Schema-check a ``python -m repro.analysis`` JSON report.
+
+    The static-analysis gate uploads this report as a CI artifact; the
+    checks here keep it machine-consumable: tool/format stamp, findings
+    carrying well-formed ``RPA<nnn>`` codes and locators, and counts
+    that agree with the lists they summarize.
+    """
+    import re as _re
+
+    errors: List[str] = []
+    if doc.get("tool") != "repro.analysis":
+        errors.append(f"analysis: tool={doc.get('tool')!r}, expected "
+                      f"'repro.analysis'")
+    if doc.get("format") != 1:
+        errors.append(f"analysis: format={doc.get('format')!r}, this "
+                      f"validator understands 1")
+    for section in ("findings", "baselined"):
+        items = doc.get(section)
+        if not isinstance(items, list):
+            errors.append(f"analysis: {section} is not a list")
+            continue
+        for i, f in enumerate(items):
+            if not isinstance(f, dict):
+                errors.append(f"analysis: {section}[{i}] not a dict")
+                continue
+            code = f.get("code", "")
+            if not _re.fullmatch(r"RPA\d{3}", str(code)):
+                errors.append(f"analysis: {section}[{i}] code "
+                              f"{code!r} is not an RPA<nnn> rule id")
+            if not isinstance(f.get("path"), str) or not f.get("path"):
+                errors.append(f"analysis: {section}[{i}] has no path")
+            if not isinstance(f.get("line"), int) or f.get("line", -1) < 0:
+                errors.append(f"analysis: {section}[{i}] line "
+                              f"{f.get('line')!r} is not an int >= 0")
+            if not isinstance(f.get("message"), str) or not f.get("message"):
+                errors.append(f"analysis: {section}[{i}] has no message")
+    n = doc.get("n_findings")
+    if isinstance(doc.get("findings"), list) and n != len(doc["findings"]):
+        errors.append(f"analysis: n_findings={n} but "
+                      f"{len(doc['findings'])} findings listed")
+    nb = doc.get("n_baselined")
+    if isinstance(doc.get("baselined"), list) and nb != len(doc["baselined"]):
+        errors.append(f"analysis: n_baselined={nb} but "
+                      f"{len(doc['baselined'])} baselined listed")
+    for head in ("lint", "verify"):
+        meta = doc.get(head)
+        if meta is not None and not isinstance(meta, dict):
+            errors.append(f"analysis: {head} section is not a dict/null")
+    return errors
+
+
 def main(argv=None) -> int:
     import argparse
     ap = argparse.ArgumentParser(
@@ -273,6 +325,8 @@ def main(argv=None) -> int:
     ap.add_argument("--drift", help="repro.obs.drift report JSON path")
     ap.add_argument("--plan-table",
                     help="plan table JSON to reconcile --drift against")
+    ap.add_argument("--analysis",
+                    help="repro.analysis report JSON path")
     args = ap.parse_args(argv)
 
     def load(path):
@@ -312,6 +366,14 @@ def main(argv=None) -> int:
               + (f", reconciled vs {args.plan_table}"
                  if args.plan_table else "")
               + f", {len(errs)} errors")
+    if args.analysis:
+        analysis = load(args.analysis)
+        errs = validate_analysis(analysis)
+        errors += errs
+        print(f"[obs.validate] analysis {args.analysis}: "
+              f"{analysis.get('n_findings', 0)} findings, "
+              f"{analysis.get('n_baselined', 0)} baselined, "
+              f"{len(errs)} errors")
     for e in errors:
         print(f"[obs.validate] ERROR: {e}")
     print(f"[obs.validate] {'FAIL' if errors else 'OK'}")

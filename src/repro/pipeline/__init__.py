@@ -12,13 +12,13 @@ from repro.pipeline.artifact import load_artifact, save_artifact
 from repro.pipeline.compile import CompiledCNN, compile_cnn
 from repro.pipeline.plan_table import PlanTable, load_plan
 from repro.pipeline.spec import (ExecutionSpec, Placement, Precision,
-                                 Serving, Tiling, resolve_config,
-                                 spec_from_config)
+                                 Serving, SpecError, Tiling,
+                                 resolve_config, spec_from_config)
 from repro.serve.scheduler import AutoscalePolicy
 
 __all__ = [
     "AutoscalePolicy", "CompiledCNN", "ExecutionSpec", "Placement",
-    "PlanTable", "Precision", "Serving", "Tiling", "compile_cnn",
-    "load_artifact", "load_plan", "resolve_config", "save_artifact",
-    "spec_from_config",
+    "PlanTable", "Precision", "Serving", "SpecError", "Tiling",
+    "compile_cnn", "load_artifact", "load_plan", "resolve_config",
+    "save_artifact", "spec_from_config",
 ]

@@ -294,6 +294,25 @@ class CompiledCNN:
         """Every DSE decision this compile resolved, as serialisable data."""
         return self.plan_table
 
+    def verify(self, *, strict: bool = False) -> list:
+        """Statically re-prove this compile's invariants (VMEM budgets,
+        block/halo geometry, spec consistency, fusion-group coverage,
+        measured-record joins) via ``repro.analysis`` — no kernel runs,
+        no DSE sweep. Returns the findings; ``strict=True`` raises
+        :class:`~repro.core.config.SpecError` on the first batch instead
+        (the ``serve_cnn --verify`` pre-flight contract)."""
+        from repro.analysis.plans import verify_compiled
+
+        findings = verify_compiled(self)
+        if strict and findings:
+            from repro.core.config import SpecError
+            raise SpecError(
+                "plan_table",
+                f"{len(findings)} static-verification finding(s) for "
+                f"{self.cfg.name!r}: "
+                + "; ".join(str(f) for f in findings))
+        return findings
+
     def save_plan(self, path: str) -> str:
         """Write the plan table as canonical JSON (byte-stable across
         save/load round trips) — commit it next to ``BENCH_conv.json``
@@ -414,6 +433,7 @@ def compile_cnn(cfg: CNNConfig, spec: Optional[ExecutionSpec] = None,
 
     # -- compile: calibration, DSE, stage planning, mesh -------------------
     sweeps_before = autotune.sweep_stats()
+    # repro: allow[RPA102] compile-track trace spans price real sweep time
     t0 = _time.perf_counter()
     with autotune.record_lookups() as rec:
         if quantize and not isinstance(params, QuantizedCNNParams):
@@ -452,6 +472,7 @@ def compile_cnn(cfg: CNNConfig, spec: Optional[ExecutionSpec] = None,
                    for k in sorted(sweeps_after)}
     if trace is not None:
         from repro.obs.trace import CAT_COMPILE, COMPILE_TRACK
+        # repro: allow[RPA102] compile-track trace spans price real sweep time
         trace.span("sweep", 0.0, _time.perf_counter() - t0,
                    track=COMPILE_TRACK, cat=CAT_COMPILE,
                    args={"lookups": {"conv": len(rec["conv"]),

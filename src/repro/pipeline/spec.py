@@ -29,7 +29,7 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional
 
-from repro.core.config import CNNConfig
+from repro.core.config import CNNConfig, SpecError
 from repro.serve.scheduler import AutoscalePolicy
 
 
@@ -122,90 +122,117 @@ class ExecutionSpec:
         p, t, pl, s = self.precision, self.tiling, self.placement, \
             self.serving
         if p.dtype not in ("float32", "bfloat16"):
-            raise ValueError(
+            raise SpecError(
+                "Precision.dtype",
                 f"Precision.dtype={p.dtype!r}: float32 or bfloat16")
         if p.quant not in ("none", "int8"):
-            raise ValueError(f"Precision.quant={p.quant!r}: none or int8")
+            raise SpecError(
+                "Precision.quant",
+                f"Precision.quant={p.quant!r}: none or int8")
         if p.quant == "int8" and p.dtype != "float32":
-            raise ValueError(
+            raise SpecError(
+                "Precision.quant",
                 "Precision.quant='int8' with dtype='bfloat16' is "
                 "contradictory: the fixed-point pipeline carries int8 "
                 "codes with int32 accumulation; its fp boundary (logits, "
                 "LRN detour, calibration) is float32 by construction")
         if p.quant == "int8" and p.calib <= 0:
-            raise ValueError(
+            raise SpecError(
+                "Precision.calib",
                 "Precision.quant='int8' needs a calibration source: set "
                 "Precision.calib > 0 or hand compile_cnn a calibration "
                 "batch / a QuantizedCNNParams")
         if t.vmem_budget <= 0:
-            raise ValueError(f"Tiling.vmem_budget={t.vmem_budget}: must "
-                             "be a positive byte budget")
+            raise SpecError(
+                "Tiling.vmem_budget",
+                f"Tiling.vmem_budget={t.vmem_budget}: must "
+                "be a positive byte budget")
         if s.batch < 1:
-            raise ValueError(f"Serving.batch={s.batch}: must be >= 1")
+            raise SpecError(
+                "Serving.batch",
+                f"Serving.batch={s.batch}: must be >= 1")
         if s.max_queue < 0:
-            raise ValueError(f"Serving.max_queue={s.max_queue}: 0 "
-                             "(unbounded) or a positive bound")
+            raise SpecError(
+                "Serving.max_queue",
+                f"Serving.max_queue={s.max_queue}: 0 "
+                "(unbounded) or a positive bound")
         if s.clock not in ("measured", "modeled"):
-            raise ValueError(f"Serving.clock={s.clock!r}: measured or "
-                             "modeled")
+            raise SpecError(
+                "Serving.clock",
+                f"Serving.clock={s.clock!r}: measured or modeled")
         if not s.execute and s.clock == "measured":
-            raise ValueError(
+            raise SpecError(
+                "Serving.execute",
                 "Serving.execute=False with clock='measured' is "
                 "contradictory: a device-free simulation has no wall "
                 "time to measure — use clock='modeled'")
         if s.retries < 0:
-            raise ValueError(f"Serving.retries={s.retries}: must be >= 0")
+            raise SpecError(
+                "Serving.retries",
+                f"Serving.retries={s.retries}: must be >= 0")
         if s.backoff < 0 or s.slo < 0:
-            raise ValueError(
+            raise SpecError(
+                "Serving.backoff",
                 f"Serving.backoff={s.backoff} / slo={s.slo}: both are "
                 "seconds >= 0")
         if s.backoff and not s.retries:
-            raise ValueError(
+            raise SpecError(
+                "Serving.backoff",
                 "Serving.backoff set with retries=0 is contradictory: "
                 "backoff only delays re-admission of retried requests")
         if s.scheduler not in ("gang", "continuous"):
-            raise ValueError(f"Serving.scheduler={s.scheduler!r}: gang "
-                             "or continuous")
+            raise SpecError(
+                "Serving.scheduler",
+                f"Serving.scheduler={s.scheduler!r}: gang "
+                "or continuous")
         if s.scheduler == "continuous" and s.clock != "modeled":
-            raise ValueError(
+            raise SpecError(
+                "Serving.scheduler",
                 "Serving.scheduler='continuous' requires "
                 "clock='modeled': slot service and microbatch-boundary "
                 "times come from the roofline model, not wall time")
         if s.steal_threshold < 0:
-            raise ValueError(
+            raise SpecError(
+                "Serving.steal_threshold",
                 f"Serving.steal_threshold={s.steal_threshold}: 0 "
                 "(stealing off) or a positive queue-skew depth")
         if (s.steal_threshold or s.autoscale is not None) and \
                 s.scheduler != "continuous":
-            raise ValueError(
+            raise SpecError(
+                "Serving.steal_threshold",
                 "Serving.steal_threshold / autoscale only exist under "
                 "scheduler='continuous': gang rounds have no "
                 "per-request slots to steal or scale")
         if s.autoscale is not None and not (
                 s.autoscale.min_replicas <= pl.replicas
                 <= s.autoscale.max_replicas):
-            raise ValueError(
+            raise SpecError(
+                "Placement.replicas",
                 f"Placement.replicas={pl.replicas} outside the "
                 f"autoscale range [{s.autoscale.min_replicas}, "
                 f"{s.autoscale.max_replicas}]")
         if t.b_blk > 1 and s.batch % t.b_blk:
-            raise ValueError(
+            raise SpecError(
+                "Tiling.b_blk",
                 f"Serving.batch={s.batch} is not a multiple of "
                 f"Tiling.b_blk={t.b_blk}: the queue pads requests to the "
                 f"serving batch, so the conv grid's image block must "
                 f"divide it")
         if pl.replicas < 1 or pl.pp_stages < 1:
-            raise ValueError(
+            raise SpecError(
+                "Placement.replicas",
                 f"Placement.replicas={pl.replicas} / "
                 f"pp_stages={pl.pp_stages}: both must be >= 1")
         if pl.microbatches:
             if pl.pp_stages == 1:
-                raise ValueError(
+                raise SpecError(
+                    "Placement.microbatches",
                     "Placement.microbatches set without pipeline stages "
                     "(pp_stages=1): GPipe microbatching only exists on "
                     "the 'pipe' mesh axis")
             if s.batch % pl.microbatches:
-                raise ValueError(
+                raise SpecError(
+                    "Placement.microbatches",
                     f"Placement.microbatches={pl.microbatches} must "
                     f"divide Serving.batch={s.batch} so every microbatch "
                     f"compiles once")

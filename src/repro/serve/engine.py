@@ -390,6 +390,7 @@ class ServeEngine:
 
         if self.pp_stages == 1:
             def logits_fn(imgs):        # (R*batch, H, W, C)
+                # repro: allow[RPA201] the shim IS the parity oracle here
                 return cnn_forward(params, imgs, cfg,
                                    use_pallas=self.use_pallas)
             fn = jax.jit(lambda imgs: jnp.argmax(logits_fn(imgs), -1))
@@ -424,6 +425,7 @@ class ServeEngine:
             params, cfg = rec["params"], rec["cfg"]
 
             def fn(imgs, params=params, cfg=cfg):
+                # repro: allow[RPA201] the shim IS the parity oracle here
                 logits = cnn_forward(params, imgs, cfg,
                                      use_pallas=self.use_pallas)
                 return jnp.argmax(logits, -1)
@@ -790,9 +792,11 @@ class ServeEngine:
                     if v not in compiled_vs:   # compile outside the clock
                         np.asarray(fn(imgs))
                         compiled_vs.add(v)
+                # repro: allow[RPA102] the measured clock measures
                 t0 = time.perf_counter()
                 preds_by_v = {v: self._unpack_preds(
                     np.asarray(self._round_fns[v](imgs))) for v in need}
+                # repro: allow[RPA102] the measured clock measures
                 t_wall = time.perf_counter() - t0
             else:
                 preds_by_v = {v: np.full((R, self.batch), -1)

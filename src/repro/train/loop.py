@@ -93,11 +93,13 @@ class ResilientLoop:
             try:
                 batch = next(data)
                 self.fault_hook(step)               # test injection point
+                # repro: allow[RPA102] step timing drives straggler detection
                 t0 = time.time()
                 state, metrics = self._jit_step(
                     state, {k: jax.numpy.asarray(v)
                             for k, v in batch.items()})
                 loss = float(metrics["loss"])
+                # repro: allow[RPA102] step timing drives straggler detection
                 dt = time.time() - t0
                 durations.append(dt)
                 med = float(np.median(durations[-50:]))

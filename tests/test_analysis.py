@@ -1,0 +1,386 @@
+"""Static-analysis subsystem tests: the artifact verifier accepts every
+committed ``CompiledCNN.save`` artifact and rejects a corrupted
+over-budget plan with a coded finding naming the row and the budget; the
+determinism lint flags the known bug classes on a synthetic module and
+reports zero findings on the live tree; both heads are pure (zero
+sweep/measure counter deltas); ``SpecError`` carries the offending field;
+the format-1/2/3 golden fixtures round-trip and verify; and the CLI
+report validates against ``repro.obs.validate --analysis``."""
+import dataclasses
+import json
+import re
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (CODES, Finding, baseline_doc, load_baseline,
+                            report_doc, run_lint, verify_artifact,
+                            verify_compiled, verify_plan_table)
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.findings import split_baseline
+from repro.analysis.lint import lint_source
+from repro.configs import get_config
+from repro.core.config import SpecError
+from repro.kernels import autotune
+from repro.models.cnn import init_cnn_params
+from repro.obs import validate_analysis
+from repro.pipeline import (ExecutionSpec, Placement, PlanTable, Precision,
+                            Serving, compile_cnn)
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures"
+KEY = jax.random.key(11)
+
+# A conv row whose plan is structurally valid but needs ~494 MiB of
+# VMEM against the declared 16 MiB budget — the "bitstream that cannot
+# fit the board" case the verifier must reject.
+OVERSIZED_CONV_ROW = {
+    "shape": {"h": 224, "w": 224, "c": 64, "kh": 3, "kw": 3, "m": 64,
+              "stride": 1, "pad": 1, "groups": 1, "pool": None,
+              "pool_k": 2, "pool_s": 2, "dtype": "float32", "b": 8},
+    "backend": "tpu",
+    "vmem_budget": 16 * 2**20,
+    "plan": {"c_blk": 64, "m_blk": 64, "oh_blk": 0, "b_blk": 8,
+             "vmem_bytes": 0, "t_model": 0.0},
+}
+
+
+def _compiled(quant=None, batch=4):
+    cfg = get_config("alexnet").smoke()
+    params = init_cnn_params(KEY, cfg)
+    if quant == "int8":
+        x = jax.random.normal(KEY, (batch, cfg.input_hw, cfg.input_hw,
+                                    cfg.input_ch), jnp.float32)
+        spec = ExecutionSpec(precision=Precision(quant="int8"),
+                             serving=Serving(batch=batch))
+        return compile_cnn(cfg, spec, (params, x))
+    return compile_cnn(cfg, ExecutionSpec(serving=Serving(batch=batch)),
+                       params)
+
+
+# ---------------------------------------------------------------------------
+# finding codes are a stable registry
+# ---------------------------------------------------------------------------
+
+def test_codes_are_stable_and_wellformed():
+    assert all(re.fullmatch(r"RPA\d{3}", c) for c in CODES)
+    assert all(CODES[c] for c in CODES)
+    # the rule families the ISSUE pins
+    assert {"RPA101", "RPA102", "RPA103", "RPA104",
+            "RPA201", "RPA202", "RPA203",
+            "RPA301", "RPA305", "RPA306", "RPA307"} <= set(CODES)
+
+
+# ---------------------------------------------------------------------------
+# Head 1: the verifier accepts every committed artifact ...
+# ---------------------------------------------------------------------------
+
+def test_verifier_accepts_saved_fp32_artifact(tmp_path, capsys):
+    c = _compiled()
+    p = tmp_path / "art"
+    c.save(p)
+    assert verify_artifact(p) == []
+    assert c.verify() == [] and c.verify(strict=True) == []
+    # ... and the CLI agrees, exit 0, with a schema-valid report
+    report = tmp_path / "report.json"
+    rc = analysis_main(["--verify-artifact", str(p), "--json", str(report)])
+    assert rc == 0
+    doc = json.loads(report.read_text())
+    assert validate_analysis(doc) == []
+    assert doc["verify"]["n_findings"] == 0 and doc["lint"] is None
+
+
+def test_verifier_accepts_saved_int8_artifact(tmp_path):
+    c = _compiled(quant="int8")
+    p = tmp_path / "art"
+    c.save(p)
+    assert verify_artifact(p) == []
+
+
+# ---------------------------------------------------------------------------
+# ... and rejects a corrupted over-budget plan, naming row and budget
+# ---------------------------------------------------------------------------
+
+def test_verifier_rejects_oversized_conv_plan(tmp_path):
+    c = _compiled()
+    p = tmp_path / "art"
+    c.save(p)
+    doc = json.loads((p / "plan_table.json").read_text())
+    row_idx = len(doc["conv"])
+    doc["conv"].append(OVERSIZED_CONV_ROW)
+    (p / "plan_table.json").write_text(
+        json.dumps(doc, sort_keys=True, indent=1) + "\n")
+
+    findings = verify_artifact(p)
+    vmem_findings = [f for f in findings if f.code == "RPA301"]
+    assert len(vmem_findings) == 1
+    f = vmem_findings[0]
+    assert f"conv[{row_idx}]" in f.path          # names the row ...
+    assert str(16 * 2**20) in f.message          # ... and the budget
+    assert "16.0 MiB" in f.message
+    assert re.search(r"needs \d+ B VMEM", f.message)
+
+    # the CLI gates on it too
+    rc = analysis_main(["--verify-plan", str(p / "plan_table.json")])
+    assert rc == 1
+
+
+def test_verifier_rejects_structural_corruption(tmp_path):
+    c = _compiled()
+    p = tmp_path / "art"
+    c.save(p)
+    (p / "_COMMITTED").unlink()
+    assert any(f.code == "RPA307" and "_COMMITTED" in f.message
+               for f in verify_artifact(p))
+    assert any(f.code == "RPA307"
+               for f in verify_artifact(tmp_path / "nowhere"))
+
+
+def test_verifier_flags_geometry_and_spec_mismatches():
+    # a pooled plan whose oh_blk is not a pool_s multiple
+    bad = dict(OVERSIZED_CONV_ROW,
+               shape=dict(OVERSIZED_CONV_ROW["shape"], h=32, w=32, c=8,
+                          m=8, pool="max", pool_k=3, pool_s=2, b=4),
+               plan={"c_blk": 8, "m_blk": 8, "oh_blk": 5, "b_blk": 1,
+                     "vmem_bytes": 0, "t_model": 0.0})
+    t = PlanTable.from_rows([bad], [])
+    assert any(f.code == "RPA303" and "pool_s" in f.message
+               for f in verify_plan_table(t))
+    # a plan keyed at the wrong dtype for an int8 spec
+    spec = ExecutionSpec(precision=Precision(quant="int8"),
+                         serving=Serving(batch=4))
+    good = dict(bad, plan=dict(bad["plan"], oh_blk=4))
+    assert any(f.code == "RPA304" and "int8" in f.message
+               for f in verify_plan_table(
+                   PlanTable.from_rows([good], []), spec=spec))
+
+
+def test_verifier_flags_unattributed_measurements():
+    row = dict(OVERSIZED_CONV_ROW,
+               shape=dict(OVERSIZED_CONV_ROW["shape"], h=16, w=16, c=8,
+                          m=8, b=2),
+               plan={"c_blk": 8, "m_blk": 8, "oh_blk": 0, "b_blk": 1,
+                     "vmem_bytes": 0, "t_model": 0.0},
+               measured={"t_measured": -1.0})
+    t = PlanTable.from_rows([row], [], provenance={"source": "registry"})
+    codes = {f.code for f in verify_plan_table(t)}
+    assert "RPA306" in codes                     # bad t_measured AND
+    assert any("measurement" in f.message        # missing fingerprint
+               for f in verify_plan_table(t) if f.code == "RPA306")
+
+
+# ---------------------------------------------------------------------------
+# purity: verification + lint never sweep, measure, or touch a kernel
+# ---------------------------------------------------------------------------
+
+def test_verifier_and_lint_are_pure(tmp_path):
+    c = _compiled()
+    p = tmp_path / "art"
+    c.save(p)
+    sweep0, meas0 = autotune.sweep_stats(), autotune.measure_stats()
+    verify_artifact(p)
+    verify_compiled(c)
+    verify_plan_table(c.plans(), spec=c.spec, cfg=c.cfg)
+    run_lint(str(REPO / "src" / "repro" / "analysis"), repo_root=str(REPO))
+    assert autotune.sweep_stats() == sweep0
+    assert autotune.measure_stats() == meas0
+
+
+# ---------------------------------------------------------------------------
+# Head 2: the determinism & contract lint
+# ---------------------------------------------------------------------------
+
+SYNTHETIC_BAD = textwrap.dedent("""\
+    import json
+    import time
+    import random
+    import numpy as np
+
+    _CACHE = {}
+
+    def cache_key(spec):
+        return hash(str(spec))            # RPA101: the PR 9 bug class
+
+    def jitter():
+        return np.random.rand() + random.random()   # RPA103 x2
+
+    def stamp():
+        return time.time()                # RPA102
+
+    def save(doc, path, extras=[]):       # RPA202
+        with open(path, "w") as f:
+            f.write(json.dumps(doc))      # RPA104
+""")
+
+
+def test_lint_flags_synthetic_module():
+    findings = lint_source(SYNTHETIC_BAD, "synthetic/bad.py")
+    codes = {f.code for f in findings}
+    assert {"RPA101", "RPA103", "RPA104"} <= codes     # the ISSUE's trio
+    assert {"RPA102", "RPA202"} <= codes
+    assert sum(f.code == "RPA103" for f in findings) == 2
+    # findings carry usable locations and snippets
+    f = next(f for f in findings if f.code == "RPA101")
+    assert f.path == "synthetic/bad.py" and f.line > 0
+    assert "hash" in f.snippet
+
+
+def test_lint_flags_shims_and_all_drift():
+    src = textwrap.dedent("""\
+        from repro.models.cnn import cnn_forward
+        __all__ = ["run", "ghost"]
+
+        def run(params, x, cfg):
+            return cnn_forward(params, x, cfg)
+    """)
+    findings = lint_source(src, "synthetic/shim.py")
+    assert any(f.code == "RPA201" and "cnn_forward" in f.message
+               for f in findings)
+    assert any(f.code == "RPA203" and "ghost" in f.message
+               for f in findings)
+
+
+def test_lint_inline_suppression():
+    noisy = "import time\n\ndef stamp():\n    return time.time()\n"
+    assert any(f.code == "RPA102" for f in lint_source(noisy, "m.py"))
+    quiet = noisy.replace(
+        "    return time.time()",
+        "    # repro: allow[RPA102] user-facing readout\n"
+        "    return time.time()")
+    assert lint_source(quiet, "m.py") == []
+    same_line = noisy.replace(
+        "return time.time()",
+        "return time.time()  # repro: allow[RPA102] readout")
+    assert lint_source(same_line, "m.py") == []
+
+
+def test_lint_baseline_is_line_number_insensitive(tmp_path):
+    findings = lint_source(SYNTHETIC_BAD, "synthetic/bad.py")
+    bl_path = tmp_path / "baseline.json"
+    bl_path.write_text(json.dumps(baseline_doc(findings), sort_keys=True))
+    baseline = load_baseline(bl_path)
+    new, old = split_baseline(findings, baseline)
+    assert new == [] and len(old) == len(findings)
+    # shift every line down: identity is (code, path, snippet), so the
+    # baseline still covers all of them
+    shifted = lint_source("# a comment\n\n" + SYNTHETIC_BAD,
+                          "synthetic/bad.py")
+    new, old = split_baseline(shifted, baseline)
+    assert new == [] and len(old) == len(shifted)
+
+
+def test_lint_rejects_unknown_baseline_format(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"format": 99, "findings": []}))
+    with pytest.raises(ValueError, match="format"):
+        load_baseline(p)
+
+
+def test_repo_lint_is_clean():
+    """The live tree carries zero non-baseline findings — every real
+    wall-clock/shim usage is explicitly allowed inline."""
+    findings, n_files = run_lint(str(REPO / "src" / "repro"),
+                                 repo_root=str(REPO))
+    baseline = load_baseline(REPO / "analysis_baseline.json")
+    new, _ = split_baseline(findings, baseline)
+    assert new == [], "\n".join(str(f) for f in new)
+    assert n_files > 30
+
+
+def test_lint_cli_gates_then_baselines(tmp_path):
+    root = tmp_path / "pkg"
+    root.mkdir()
+    (root / "bad.py").write_text(SYNTHETIC_BAD)
+    report = tmp_path / "report.json"
+    rc = analysis_main(["--lint", "--root", str(root),
+                        "--repo-root", str(tmp_path),
+                        "--json", str(report)])
+    assert rc == 1
+    doc = json.loads(report.read_text())
+    assert validate_analysis(doc) == []
+    assert doc["n_findings"] > 0 and doc["lint"]["files_scanned"] == 1
+    # freeze the findings into a baseline: the gate opens
+    findings, _ = run_lint(str(root), repo_root=str(tmp_path))
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps(baseline_doc(findings), sort_keys=True))
+    rc = analysis_main(["--lint", "--root", str(root),
+                        "--repo-root", str(tmp_path),
+                        "--baseline", str(bl), "--json", str(report)])
+    assert rc == 0
+    doc = json.loads(report.read_text())
+    assert validate_analysis(doc) == []
+    assert doc["n_findings"] == 0 and doc["n_baselined"] == len(findings)
+
+
+# ---------------------------------------------------------------------------
+# SpecError: rejections carry the offending field (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("build,field", [
+    (lambda: ExecutionSpec(serving=Serving(batch=0)), "Serving.batch"),
+    (lambda: ExecutionSpec(precision=Precision(dtype="float16")),
+     "Precision.dtype"),
+    (lambda: ExecutionSpec(placement=Placement(replicas=0)),
+     "Placement.replicas"),
+    (lambda: dataclasses.replace(get_config("alexnet"), quant="int4"),
+     "CNNConfig.quant"),
+    (lambda: dataclasses.replace(get_config("alexnet"), pp_stages=99),
+     "CNNConfig.pp_stages"),
+])
+def test_spec_error_names_the_field(build, field):
+    with pytest.raises(SpecError) as ei:
+        build()
+    assert ei.value.field == field
+    assert isinstance(ei.value, ValueError)      # old handlers still work
+
+
+# ---------------------------------------------------------------------------
+# golden fixtures: formats 1/2/3 round-trip and verify (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", [1, 2, 3])
+def test_fixture_roundtrips_and_verifies(fmt):
+    text = (FIXTURES / f"plan_table_format{fmt}.json").read_text()
+    assert json.loads(text)["format"] == fmt
+    table = PlanTable.from_json(text)
+    assert len(table) == 2
+    # semantic round-trip through the canonical (format-3) serialisation
+    again = PlanTable.from_json(table.to_json())
+    assert again == table and again.to_json() == table.to_json()
+    assert verify_plan_table(
+        table, path=f"fixtures/format{fmt}") == []
+    if fmt >= 2:
+        assert table.provenance.get("source") == "registry"
+    if fmt == 3:
+        m = table.measurements()
+        assert len(m) == 2
+        assert all(rec["t_measured"] > 0 for rec in m.values())
+        assert "measurement" in table.provenance
+
+
+def test_fixture_format3_corruption_is_caught():
+    text = (FIXTURES / "plan_table_format3.json").read_text()
+    doc = json.loads(text)
+    doc["conv"][0]["measured"]["t_measured"] = 0.0
+    t = PlanTable.from_json(json.dumps(doc))
+    assert any(f.code == "RPA306" for f in verify_plan_table(t))
+
+
+# ---------------------------------------------------------------------------
+# the report document schema (validated in CI by obs.validate --analysis)
+# ---------------------------------------------------------------------------
+
+def test_report_schema_round_trip():
+    f = Finding("RPA301", "plan_table#conv[0]", 0, "over budget")
+    doc = report_doc(findings=[f], baselined=[],
+                     lint=None, verify={"artifact": None,
+                                        "plan_table": "t.json",
+                                        "n_findings": 1})
+    assert validate_analysis(doc) == []
+    bad = dict(doc, n_findings=7)
+    assert validate_analysis(bad)                # count mismatch caught
+    bad = dict(doc, findings=[dict(f.to_dict(), code="OOPS")])
+    assert validate_analysis(bad)                # malformed code caught

@@ -20,6 +20,7 @@ PIPELINE_SURFACE = {
     "PlanTable",
     "Precision",
     "Serving",
+    "SpecError",
     "Tiling",
     "compile_cnn",
     "load_artifact",
@@ -58,6 +59,7 @@ OBS_SURFACE = {
     "validate_trace",
     "validate_metrics",
     "validate_drift",
+    "validate_analysis",
     "reconcile",
 }
 
@@ -70,10 +72,12 @@ AUTOTUNE_SURFACE = {
     "GemmShape",
     "GemmPlan",
     "conv_vmem_bytes",
+    "plan_fits",
     "score_plan",
     "enumerate_plans",
     "best_plan",
     "gemm_vmem_bytes",
+    "gemm_plan_fits",
     "score_gemm_plan",
     "enumerate_gemm_plans",
     "best_gemm_plan",
@@ -132,7 +136,7 @@ def test_compiled_cnn_runtime_surface():
     """The CompiledCNN method contract of the compile-once API."""
     for method in ("forward", "forward_stage", "serve", "plans",
                    "save_plan", "load_plan", "save", "load",
-                   "roofline_breakdown"):
+                   "roofline_breakdown", "verify"):
         assert callable(getattr(pipeline.CompiledCNN, method, None)), \
             f"CompiledCNN.{method} missing"
 

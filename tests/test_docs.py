@@ -50,7 +50,8 @@ def test_readmes_exist_where_the_top_level_readme_says():
     text = top.read_text()
     for sub in ("src/repro/kernels/README.md",
                 "src/repro/pipeline/README.md",
-                "src/repro/serve/README.md"):
+                "src/repro/serve/README.md",
+                "src/repro/analysis/README.md"):
         assert sub in text, f"top README does not link {sub}"
         assert (REPO / sub).exists(), f"{sub} linked but missing"
 
